@@ -1,0 +1,109 @@
+"""Roofline table generator — reads artifacts/dryrun, emits markdown.
+
+Three terms per (arch × shape × mesh), in seconds per step:
+
+  compute    = analytic_FLOPs_global / (chips × 197e12)
+  memory     = analytic_HBM_bytes_per_device / 819e9
+  collective = HLO_wire_bytes_per_device / 50e9   (loop-amplified parse)
+
+MODEL_FLOPS = 6·N·T (train) / 2·N·T (inference), N = active params.
+roofline_fraction = MODEL_FLOPS_time / max(term) — the MFU upper bound the
+sharding currently admits. XLA cost_analysis numbers are recorded as
+floors (its while-loop bodies are counted once; verified + documented).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def load_cells(mesh: str) -> list[dict]:
+    out = []
+    for p in sorted((ART / mesh).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        out.append(r)
+    return out
+
+
+def terms(rec: dict) -> dict:
+    chips = rec["chips"]
+    fl = rec["analytic"]["flops"]
+    compute = fl["total"] / (chips * PEAK)
+    memory = rec["analytic"]["hbm_bytes_per_device"] / HBM
+    coll = rec["collectives"]
+    wire_raw = coll["wire_bytes_per_device"] / ICI
+    wire = coll.get(
+        "wire_bytes_per_device_tpu_adjusted",
+        coll["wire_bytes_per_device"],
+    ) / ICI
+    model_time = fl["model"] / (chips * PEAK)
+    bound = max(compute, memory, wire)
+    dom = (
+        "compute" if bound == compute
+        else "memory" if bound == memory
+        else "collective"
+    )
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": wire,
+        "collective_s_raw": wire_raw,
+        "dominant": dom,
+        "model_flops": fl["model"],
+        "flops_ratio": fl["model"] / max(fl["total"], 1.0),
+        "roofline_fraction": model_time / max(bound, 1e-30),
+        "xla_flops_floor": rec["cost_analysis"]["flops_per_device"] * chips,
+        "peak_gib": rec["memory_analysis"]["peak_bytes_estimate"] / 2**30,
+    }
+
+
+def table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s (raw) "
+        "| dominant | MODEL/total | roofline frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} ({t['collective_s_raw']:.3f}) "
+            f"| **{t['dominant']}** | {t['flops_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} | {t['peak_gib']:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def csv_rows(mesh: str = "single") -> list[str]:
+    out = []
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        out.append(
+            f"roofline/{rec['arch']}/{rec['shape']},"
+            f"{bound * 1e6:.1f},"
+            f"dom={t['dominant']};frac={t['roofline_fraction']:.3f}"
+        )
+    return out
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        if not (ART / mesh).exists():
+            print(f"(no {mesh} artifacts — run repro.launch.dryrun)")
+            continue
+        print(f"\n## Roofline — {mesh} mesh\n")
+        print(table(mesh))
+
+
+if __name__ == "__main__":
+    main()

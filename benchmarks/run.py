@@ -1,0 +1,197 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  table1_memory    — paper Table 1 (scaled): per-layer bytes, equivalent
+                     projected edges, compression ratio; plus the analytic
+                     full-scale (20M-node) reproduction.
+  query_perf       — paper §4.2: checkedge / getedge / getnodealters /
+                     pseudo-walk step latency, one-mode and two-mode.
+  shortest_path    — paper Listing 3: multilayer + single-layer BFS.
+  walk_throughput  — §5 random-walker fleet steps/second.
+  kernel_intersect — pseudo-projection hot path: engine jnp vs all-pairs.
+  roofline         — the three dry-run roofline terms per (arch × shape).
+
+Scale knob: BENCH_SCALE env (default 1 → 100k nodes; paper scale is 200×).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1"))
+N_NODES = int(100_000 * SCALE)
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def _timeit(fn, *args, n_warmup=2, n_iter=5) -> float:
+    """Median wall time per call in µs (blocks on jax outputs)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def build_benchmark_network():
+    """Paper Listing 2 at 1/200 scale (same structure, CPU-sized)."""
+    from repro.core.api import addlayer, createnetwork, createnodeset, generate
+
+    n = N_NODES
+    net = createnetwork(createnodeset(n))
+    net = generate(addlayer(net, "Random", 1), "Random",
+                   type="er", p=20.0 / n, seed=1)
+    net = generate(addlayer(net, "Neighbors", 1), "Neighbors",
+                   type="ws", k=20, beta=0.1, seed=2)
+    net = generate(addlayer(net, "Communication", 1), "Communication",
+                   type="ba", m=10, seed=3)
+    net = generate(addlayer(net, "Workplaces", 2), "Workplaces",
+                   type="2mode", h=max(n // 2000, 2), a=20, seed=4)
+    return net
+
+
+def table1_memory(net) -> None:
+    from repro.core import memory_report
+
+    rep = memory_report(net)
+    for layer in rep.layers:
+        derived = f"bytes={layer.nbytes};edges={layer.n_edges}"
+        if layer.mode == 2:
+            derived += (
+                f";eq_projected={layer.equivalent_projected_edges}"
+                f";compression={layer.compression_ratio:.0f}:1"
+            )
+        emit(f"table1/{layer.name}", 0.0, derived)
+    emit("table1/total", 0.0, f"bytes={rep.total_nbytes}")
+
+    # analytic reproduction at full paper scale (20M nodes, 400M memberships)
+    memb = 400_000_000
+    csr_bytes = 4 * (2 * memb) + 4 * (20_000_001) + 4 * 10_001
+    ratio = 8 * 8e12 / csr_bytes
+    emit(
+        "table1/paper_scale_analytic", 0.0,
+        f"csr_gb={csr_bytes / 2**30:.2f};eq=8e12;compression={ratio:.0f}:1"
+        ";paper_claim=2000:1",
+    )
+
+
+def query_perf(net) -> None:
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    B = 4096
+    u = jnp.asarray(rng.integers(0, net.n_nodes, B), jnp.int32)
+    v = jnp.asarray(rng.integers(0, net.n_nodes, B), jnp.int32)
+    wk = net.layer("Workplaces")
+    ba = net.layer("Communication")
+
+    checkedge_1m = jax.jit(lambda a, b: ba.check_edge(a, b))
+    checkedge_2m = jax.jit(lambda a, b: wk.check_edge(a, b))
+    getedge_2m = jax.jit(lambda a, b: wk.edge_value(a, b))
+    kernel_2m = jax.jit(
+        lambda a, b: kops.pseudo_edge_value(wk, a, b, use_pallas=False)
+    )
+    alters_1m = jax.jit(lambda a: ba.node_alters(a, 64))
+    sample_2m = jax.jit(lambda a, k: wk.sample_neighbor(a, k))
+
+    for name, fn, args in [
+        ("checkedge/one_mode", checkedge_1m, (u, v)),
+        ("checkedge/two_mode_pseudo", checkedge_2m, (u, v)),
+        ("getedge/two_mode_pseudo", getedge_2m, (u, v)),
+        ("getedge/two_mode_kernelpath", kernel_2m, (u, v)),
+        ("getnodealters/one_mode", alters_1m, (u,)),
+        ("walkstep/two_mode_pseudo", sample_2m, (u, jax.random.PRNGKey(0))),
+    ]:
+        us = _timeit(fn, *args)
+        emit(f"query/{name}", us / B, f"batch={B};us_per_batch={us:.0f}")
+
+
+def shortest_path(net) -> None:
+    from repro.core import shortest_path_length
+
+    t0 = time.perf_counter()
+    d_all = shortest_path_length(net, 0, net.n_nodes // 2)
+    t_all = (time.perf_counter() - t0) * 1e6
+    emit("shortestpath/all_layers", t_all, f"dist={d_all}")
+
+    t0 = time.perf_counter()
+    d_one = shortest_path_length(net, 0, net.n_nodes // 2, ["Neighbors"])
+    t_one = (time.perf_counter() - t0) * 1e6
+    emit("shortestpath/one_layer", t_one, f"dist={d_one}")
+
+
+def walk_throughput(net) -> None:
+    from repro.core import random_walk
+
+    B, steps = 8192, 64
+    walk = jax.jit(
+        lambda s, k: random_walk(net, s, steps, k)
+    )
+    starts = jnp.arange(B, dtype=jnp.int32) % net.n_nodes
+    us = _timeit(walk, starts, jax.random.PRNGKey(0))
+    rate = B * steps / (us / 1e6)
+    emit("walks/multilayer_fleet", us / (B * steps),
+         f"steps_per_s={rate:.0f};walkers={B};steps={steps}")
+
+
+def kernel_intersect() -> None:
+    from repro.kernels import ops as kops, ref
+
+    rng = np.random.default_rng(0)
+    B, K = 8192, 64
+    a = np.sort(rng.integers(0, 10_000, (B, K)).astype(np.int32), axis=1)
+    b = np.sort(rng.integers(0, 10_000, (B, K)).astype(np.int32), axis=1)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    jnp_path = jax.jit(lambda x, y: ref.intersect_count_ref(x, y))
+    us = _timeit(jnp_path, aj, bj)
+    emit("kernel/intersect_allpairs_jnp", us / B, f"batch={B};K={K}")
+    interp = _timeit(
+        lambda x, y: kops.intersect_count(x, y, interpret=True), aj, bj
+    )
+    emit("kernel/intersect_pallas_interpret", interp / B,
+         "correctness_mode;TPU_is_target")
+
+
+def roofline() -> None:
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).parent))
+    import roofline_report
+
+    for row in roofline_report.csv_rows("single"):
+        ROWS.append(row)
+        print(row)
+
+
+def main() -> None:
+    print(f"# benchmark network: {N_NODES:,} nodes (BENCH_SCALE={SCALE})")
+    net = build_benchmark_network()
+    table1_memory(net)
+    query_perf(net)
+    shortest_path(net)
+    walk_throughput(net)
+    kernel_intersect()
+    try:
+        roofline()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"# roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train an LM on pseudo-projected graph-walk data.
+
+The full stack in one script — the paper's engine generates the corpus
+(multilayer random walks over a population network, two-mode layers
+stepped in O(1) via pseudo-projection), and the framework trains a
+selectable architecture on it with checkpoint/resume fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_walk_lm.py \
+          [--arch qwen3-1.7b] [--steps 300]
+
+(~100M-param variant: --preset 100m — a few hundred steps is hours on
+CPU; the default preset is CPU-sized and finishes in minutes.)
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import WalkCorpus, WalkCorpusConfig, demo_population_network
+from repro.models.config import param_count
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import Trainer, TrainerConfig
+
+PRESETS = {
+    # name: (layers, d_model, d_ff, heads, kv, vocab)
+    "tiny": (4, 256, 512, 4, 2, 4096),
+    "25m": (8, 512, 1536, 8, 4, 8192),
+    "100m": (12, 768, 3072, 12, 4, 32768),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--graph-nodes", type=int, default=5_000)
+    ap.add_argument("--ckpt-dir", default="checkpoints/walk_lm")
+    args = ap.parse_args()
+
+    L, D, F, H, KV, V = PRESETS[args.preset]
+    base = get_config(args.arch)
+    cfg = base.reduced(
+        n_layers=max(L // max(len(base.block_pattern), 1), 1)
+        * max(len(base.block_pattern), 1),
+        d_model=D, d_ff=F, n_heads=H, n_kv_heads=KV, head_dim=D // H,
+        vocab_size=V,
+    )
+    model = Model(cfg)
+    print(f"arch={cfg.name} ({param_count(cfg)/1e6:.1f}M params, "
+          f"family={cfg.family})")
+
+    # -- the paper's engine as data substrate ------------------------------
+    net = demo_population_network(args.graph_nodes, seed=0)
+    print(f"population network: {net.n_nodes:,} nodes, "
+          f"layers={net.layer_names}")
+    corpus = WalkCorpus(
+        net,
+        WalkCorpusConfig(
+            seed=0, batch_size=args.batch_size, seq_len=args.seq_len,
+            n_codebooks=cfg.n_codebooks, prefix_embeds=cfg.n_prefix_embeds,
+            d_model=cfg.d_model,
+        ),
+        vocab_size=cfg.vocab_size,
+    )
+
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr_peak=3e-3, warmup_steps=args.steps // 20,
+                    decay_steps=args.steps),
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=100, log_every=20),
+    )
+    _, history = trainer.fit(None, corpus.batch_at, resume=True)
+    if history:
+        first, last = history[0][1], history[-1][1]
+        print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+              "(walk corpora are learnable: walks revisit hub structure)")
+
+
+if __name__ == "__main__":
+    main()

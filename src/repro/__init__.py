@@ -1,0 +1,1 @@
+"""Threadle-JAX: multilayer mixed-mode network engine + multi-pod LM framework."""

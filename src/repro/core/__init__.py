@@ -1,0 +1,51 @@
+"""repro.core — Threadle in JAX: multilayer mixed-mode network storage/query.
+
+The paper's contribution (pseudo-projection of two-mode layers, native
+multilayer mixed-mode storage, sparse attribute manager) as a composable
+JAX library of frozen-pytree data structures and batched, jit-compatible
+query functions. See DESIGN.md for the C#→TPU adaptation map.
+"""
+
+from .csr import CSR, SENTINEL, csr_from_coo, csr_transpose
+from .layers import (
+    LayerOneMode,
+    LayerTwoMode,
+    one_mode_from_edges,
+    two_mode_from_memberships,
+)
+from .network import Network, create_network
+from .nodeset import AttributeStore, Nodeset, create_nodeset
+from .generators import (
+    barabasi_albert,
+    erdos_renyi,
+    random_two_mode,
+    watts_strogatz,
+)
+from .analysis import (
+    bfs_distances,
+    connected_components,
+    degree_centrality,
+    density,
+    shortest_path_length,
+)
+from .processing import dichotomize, filter_edges, subgraph_layer, symmetrize
+from .projection import project_two_mode, projection_nbytes
+from .walks import ego_sample, neighborhood_sample, random_walk
+from .memory import memory_report
+from .io import load_network, save_network
+
+__all__ = [
+    "CSR", "SENTINEL", "csr_from_coo", "csr_transpose",
+    "LayerOneMode", "LayerTwoMode",
+    "one_mode_from_edges", "two_mode_from_memberships",
+    "Network", "create_network",
+    "AttributeStore", "Nodeset", "create_nodeset",
+    "barabasi_albert", "erdos_renyi", "random_two_mode", "watts_strogatz",
+    "bfs_distances", "connected_components", "degree_centrality",
+    "density", "shortest_path_length",
+    "dichotomize", "filter_edges", "subgraph_layer", "symmetrize",
+    "project_two_mode", "projection_nbytes",
+    "ego_sample", "neighborhood_sample", "random_walk",
+    "memory_report",
+    "load_network", "save_network",
+]

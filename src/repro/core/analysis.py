@@ -1,0 +1,248 @@
+"""Proof-of-concept analytics (paper §3.1 'Analysis' area), multilayer-aware.
+
+* degree centrality, density, attribute summaries — trivial reductions.
+* BFS shortest paths across any subset of layers of mixed modes: dense
+  frontier expansion. Two-mode layers advance node-frontier → hyperedge
+  -frontier → node-frontier, i.e. one *pseudo-projected* hop costs two
+  bipartite sparse ops and never touches the k(k−1)/2 projection —
+  DESIGN.md §4.2's traversal form of the paper's idea.
+* connected components: iterative label propagation (min-label) to fixpoint,
+  also through hyperedges without projecting.
+
+Frontier expansion uses per-edge source-row ids (csr_row_ids), built lazily
+host-side and O(nnz) per BFS level — the data-parallel formulation.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .csr import CSR, csr_row_ids
+from .layers import LayerOneMode, LayerTwoMode
+from .network import Network
+
+__all__ = [
+    "degree_centrality",
+    "density",
+    "attribute_summary",
+    "bfs_distances",
+    "shortest_path_length",
+    "connected_components",
+]
+
+_INF = jnp.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Simple metrics
+# ---------------------------------------------------------------------------
+
+
+def degree_centrality(net: Network, layer_names: Sequence[str] | None = None):
+    """Per-node degree summed over selected layers (two-mode: memberships)."""
+    total = jnp.zeros((net.n_nodes,), dtype=jnp.int32)
+    for layer in net._select(layer_names):
+        total = total + layer.degrees().astype(jnp.int32)
+    return total
+
+
+def density(layer) -> float:
+    n = layer.n_nodes
+    if n < 2:
+        return 0.0
+    if isinstance(layer, LayerTwoMode):
+        # bipartite density: memberships / (n_nodes * n_hyperedges)
+        return float(layer.n_memberships) / (n * max(layer.n_hyperedges, 1))
+    possible = n * (n - 1)
+    if not layer.directed:
+        possible //= 2
+    return float(layer.n_edges) / possible
+
+
+def attribute_summary(net: Network, name: str) -> dict:
+    col = net.nodeset.attrs.column(name)
+    vals = np.asarray(col.values)
+    out = {
+        "name": name,
+        "kind": col.kind,
+        "n_set": col.n_set,
+        "coverage": col.n_set / max(net.n_nodes, 1),
+    }
+    if col.kind in ("int", "float") and vals.size:
+        out.update(
+            mean=float(vals.mean()), min=float(vals.min()),
+            max=float(vals.max()), std=float(vals.std()),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Frontier expansion primitives
+# ---------------------------------------------------------------------------
+
+
+def _expand_csr(
+    csr: CSR, row_ids: jnp.ndarray, frontier: jnp.ndarray, n_out: int
+) -> jnp.ndarray:
+    """bool[n_rows] frontier -> bool[n_out] reached via csr edges. O(nnz)."""
+    if csr.nnz == 0:
+        return jnp.zeros((n_out,), dtype=bool)
+    active = jnp.take(frontier, row_ids)  # per-edge: source in frontier?
+    out = jnp.zeros((n_out,), dtype=bool)
+    return out.at[csr.indices].max(active)
+
+
+class _LayerExpander:
+    """Pre-extracts row-id arrays so expansion is pure jnp (jit-friendly)."""
+
+    def __init__(self, layer):
+        self.layer = layer
+        if isinstance(layer, LayerTwoMode):
+            self.memb_rows = csr_row_ids(layer.memb)
+            self.members_rows = csr_row_ids(layer.members)
+        else:
+            self.out_rows = csr_row_ids(layer.out)
+
+    def expand(self, frontier: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+        if isinstance(self.layer, LayerTwoMode):
+            he = _expand_csr(
+                self.layer.memb, self.memb_rows, frontier,
+                self.layer.n_hyperedges,
+            )
+            return _expand_csr(
+                self.layer.members, self.members_rows, he, n_nodes
+            )
+        return _expand_csr(self.layer.out, self.out_rows, frontier, n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# BFS shortest paths
+# ---------------------------------------------------------------------------
+
+
+def bfs_distances(
+    net: Network,
+    source: int | jnp.ndarray,
+    layer_names: Sequence[str] | None = None,
+    max_steps: int | None = None,
+) -> jnp.ndarray:
+    """Unweighted multilayer BFS -> int32[n_nodes] distances (INF unreached).
+
+    Pseudo-projected hops through two-mode layers count as ONE step (they
+    are edges of the never-materialized projection).
+    """
+    n = net.n_nodes
+    expanders = [_LayerExpander(l) for l in net._select(layer_names)]
+    max_steps = n if max_steps is None else max_steps
+
+    src = jnp.zeros((n,), dtype=bool).at[jnp.asarray(source)].set(True)
+
+    def step(state):
+        dist, frontier, d = state
+        nxt = jnp.zeros((n,), dtype=bool)
+        for e in expanders:
+            nxt = nxt | e.expand(frontier, n)
+        nxt = nxt & (dist == _INF)
+        dist = jnp.where(nxt, d + 1, dist)
+        return dist, nxt, d + 1
+
+    def cond(state):
+        _, frontier, d = state
+        return jnp.any(frontier) & (d < max_steps)
+
+    dist0 = jnp.where(src, 0, _INF).astype(jnp.int32)
+    dist, _, _ = jax.lax.while_loop(cond, step, (dist0, src, jnp.int32(0)))
+    return dist
+
+
+def shortest_path_length(
+    net: Network,
+    source: int,
+    target: int,
+    layer_names: Sequence[str] | None = None,
+) -> int:
+    """Paper Listing 3 ``shortestpath`` — returns -1 if unreachable."""
+    n = net.n_nodes
+    expanders = [_LayerExpander(l) for l in net._select(layer_names)]
+    src = jnp.zeros((n,), dtype=bool).at[source].set(True)
+    visited = src
+
+    def cond(state):
+        visited, frontier, d, found = state
+        return (~found) & jnp.any(frontier) & (d < n)
+
+    def step(state):
+        visited, frontier, d, _ = state
+        nxt = jnp.zeros((n,), dtype=bool)
+        for e in expanders:
+            nxt = nxt | e.expand(frontier, n)
+        nxt = nxt & ~visited
+        visited = visited | nxt
+        return visited, nxt, d + 1, nxt[target]
+
+    _, _, d, found = jax.lax.while_loop(
+        cond, step, (visited, src, jnp.int32(0), src[target])
+    )
+    return int(jnp.where(found, d, -1))
+
+
+# ---------------------------------------------------------------------------
+# Connected components
+# ---------------------------------------------------------------------------
+
+
+def connected_components(
+    net: Network, layer_names: Sequence[str] | None = None
+) -> jnp.ndarray:
+    """Min-label propagation to fixpoint -> int32[n_nodes] component labels.
+
+    Two-mode layers propagate through hyperedge labels (segment-min over
+    members), never projecting. Directed layers are treated as undirected
+    (weak components).
+    """
+    n = net.n_nodes
+    layers = net._select(layer_names)
+    prep = []
+    for layer in layers:
+        if isinstance(layer, LayerTwoMode):
+            prep.append(("2", layer, csr_row_ids(layer.memb),
+                         csr_row_ids(layer.members)))
+        else:
+            prep.append(("1", layer, csr_row_ids(layer.out), None))
+
+    def sweep(labels):
+        for kind, layer, rows, hrows in prep:
+            if kind == "1":
+                csr = layer.out
+                if csr.nnz == 0:
+                    continue
+                src_lab = jnp.take(labels, rows)
+                labels = labels.at[csr.indices].min(src_lab)
+                dst_lab = jnp.take(labels, csr.indices)
+                labels = labels.at[rows].min(dst_lab)
+            else:
+                if layer.memb.nnz == 0:
+                    continue
+                he = jnp.full((layer.n_hyperedges,), _INF, dtype=jnp.int32)
+                he = he.at[hrows].min(jnp.take(labels, layer.members.indices))
+                node_min = jnp.take(he, layer.memb.indices)
+                labels = labels.at[rows].min(node_min)
+        return labels
+
+    def cond(state):
+        labels, prev, it = state
+        return jnp.any(labels != prev) & (it < n)
+
+    def body(state):
+        labels, _, it = state
+        return sweep(labels), labels, it + 1
+
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    labels, _, _ = jax.lax.while_loop(
+        cond, body, (sweep(labels0), labels0, jnp.int32(0))
+    )
+    return labels

@@ -1,0 +1,111 @@
+"""Script-style API mirroring the paper's CLI command set (Listings 2–3).
+
+Thin functional wrappers so the paper's benchmark scripts translate
+line-for-line (see examples/population_graph.py):
+
+    nodes = createnodeset(createnodes=20_000_000)
+    net   = createnetwork(nodeset=nodes)
+    net   = addlayer(net, "Random", mode=1, directed=False)
+    net   = generate(net, "Random", type="er", p=1e-6)
+    ...
+    checkedge(net, "Workplaces", 1_000_000, 5_000_000)
+
+Unlike the C# engine, these are functional (each mutation returns a new
+Network) — JAX arrays are immutable.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .generators import barabasi_albert, erdos_renyi, random_two_mode, watts_strogatz
+from .layers import one_mode_from_edges, two_mode_empty
+from .network import Network, create_network
+from .nodeset import Nodeset, create_nodeset
+from .analysis import shortest_path_length
+from .memory import memory_report
+from .io import load_network, save_network
+
+__all__ = [
+    "createnodeset", "createnetwork", "addlayer", "generate",
+    "checkedge", "getedge", "getnodealters", "shortestpath",
+    "memoryreport", "savefile", "loadfile",
+]
+
+
+def createnodeset(createnodes: int) -> Nodeset:
+    return create_nodeset(createnodes)
+
+
+def createnetwork(nodeset: Nodeset | int) -> Network:
+    return create_network(nodeset)
+
+
+def addlayer(
+    net: Network, name: str, mode: int = 1, directed: bool = False,
+    valued: bool = False, n_hyperedges: int = 1,
+) -> Network:
+    if mode == 2:
+        return net.with_layer(name, two_mode_empty(net.n_nodes, n_hyperedges))
+    return net.with_layer(
+        name,
+        one_mode_from_edges(net.n_nodes, [], [], directed=directed),
+    )
+
+
+def generate(net: Network, name: str, type: str, seed: int = 0, **params) -> Network:
+    """Fill a layer with a random graph: type in {er, ws, ba, 2mode}."""
+    n = net.n_nodes
+    if type == "er":
+        layer = erdos_renyi(n, p=params["p"], seed=seed)
+    elif type == "ws":
+        layer = watts_strogatz(n, k=params["k"], beta=params["beta"], seed=seed)
+    elif type == "ba":
+        layer = barabasi_albert(n, m=params["m"], seed=seed)
+    elif type == "2mode":
+        layer = random_two_mode(n, h=params["h"], a=params["a"], seed=seed)
+    else:
+        raise ValueError(f"unknown generator type {type!r}")
+    return net.with_layer(name, layer)
+
+
+def checkedge(net: Network, layer: str, u, v):
+    """Paper Listing 3: edge existence (pseudo-projected for 2-mode)."""
+    out = net.check_edge(layer, u, v)
+    return bool(out[0]) if out.shape == (1,) else out
+
+
+def getedge(net: Network, layer: str, u, v):
+    out = net.edge_value(layer, u, v)
+    return float(out[0]) if out.shape == (1,) else out
+
+
+def getnodealters(
+    net: Network, u, layernames: Sequence[str] | None = None,
+    max_alters: int = 4096,
+):
+    vals, mask = net.node_alters(jnp.asarray(u), max_alters, layernames)
+    if vals.ndim == 2 and vals.shape[0] == 1:
+        return jnp.asarray(vals[0][mask[0]])
+    return vals, mask
+
+
+def shortestpath(
+    net: Network, u: int, v: int, layernames: Sequence[str] | None = None
+) -> int:
+    return shortest_path_length(net, u, v, layernames)
+
+
+def memoryreport(net: Network):
+    return memory_report(net)
+
+
+def savefile(obj: Network, file: str) -> None:
+    save_network(obj, file)
+
+
+def loadfile(file: str) -> Network:
+    return load_network(file)

@@ -1,0 +1,222 @@
+"""Threadle.CLIconsole analogue: the paper's scripting language (§3.4).
+
+Interprets the command set of Listings 2–3 over a session namespace, in
+two output modes — human-readable ``text`` and machine-readable ``json``
+(the mode threadleR drives). Example script (paper Listing 2, mini):
+
+    nodes = createnodeset(createnodes = 20000)
+    net = createnetwork(nodeset = nodes)
+    addlayer(net, "Random", mode = 1, directed = false)
+    generate(net, "Random", type = er, p = 0.0005)
+    addlayer(net, "Workplaces", mode = 2)
+    generate(net, "Workplaces", type = 2mode, h = 100, a = 5)
+    checkedge(net, Workplaces, 100, 500)
+    getnodealters(net, 100, layernames = Workplaces; Random)
+    shortestpath(net, 100, 500)
+    memoryreport(net)
+    savefile(net, file = "bench.npz")
+
+Commands mutate by rebinding (the engine is functional): ``addlayer(net,
+...)`` rebinds ``net``. Run a script:
+``python -m repro.core.cli script.thr [--json]`` or pipe via stdin.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+import numpy as np
+
+from . import api
+from .memory import memory_report
+
+_TOKEN = re.compile(r'"[^"]*"|[^,]+')
+
+
+class CLIError(ValueError):
+    pass
+
+
+def _parse_value(tok: str):
+    tok = tok.strip()
+    if tok.startswith('"') and tok.endswith('"'):
+        return tok[1:-1]
+    low = tok.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        pass
+    return tok  # bare identifier (variable name / enum like `er`)
+
+
+def _parse_call(line: str):
+    """'x = cmd(a, k = v, names = A; B)' -> (target, cmd, args, kwargs)."""
+    target = None
+    if "=" in line.split("(", 1)[0]:
+        target, line = (s.strip() for s in line.split("=", 1))
+    m = re.match(r"^\s*(\w+)\s*\((.*)\)\s*$", line, re.S)
+    if not m:
+        raise CLIError(f"cannot parse: {line!r}")
+    cmd, body = m.group(1), m.group(2)
+    args, kwargs = [], {}
+    for tok in _TOKEN.findall(body):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if "=" in tok and not tok.startswith('"'):
+            k, v = (s.strip() for s in tok.split("=", 1))
+            if ";" in v:
+                kwargs[k] = [_parse_value(x) for x in v.split(";")]
+            else:
+                kwargs[k] = _parse_value(v)
+        else:
+            args.append(_parse_value(tok))
+    return target, cmd, args, kwargs
+
+
+class Session:
+    """Names -> engine objects; dispatches the paper's command set."""
+
+    def __init__(self, mode: str = "text"):
+        self.env: dict = {}
+        self.mode = mode
+
+    # -- helpers -------------------------------------------------------------
+
+    def _resolve(self, v):
+        if isinstance(v, str) and v in self.env:
+            return self.env[v]
+        return v
+
+    def _emit(self, command: str, result) -> str:
+        if self.mode == "json":
+            return json.dumps({"command": command, "result": result})
+        return f"{result}"
+
+    # -- command dispatch ----------------------------------------------------
+
+    def run_line(self, line: str) -> str | None:
+        line = line.split("#", 1)[0].strip()
+        if not line:
+            return None
+        target, cmd, args, kwargs = _parse_call(line)
+        args = [self._resolve(a) for a in args]
+        kwargs = {k: self._resolve(v) for k, v in kwargs.items()}
+        handler = getattr(self, f"_cmd_{cmd}", None)
+        if handler is None:
+            raise CLIError(f"unknown command {cmd!r}")
+        out, value = handler(*args, **kwargs)
+        if target is not None:
+            self.env[target] = value if value is not None else out
+        return self._emit(cmd, out) if out is not None else None
+
+    def run_script(self, text: str) -> list[str]:
+        outputs = []
+        for line in text.splitlines():
+            res = self.run_line(line)
+            if res is not None:
+                outputs.append(res)
+        return outputs
+
+    # -- the paper's commands --------------------------------------------------
+
+    def _cmd_createnodeset(self, *, createnodes: int):
+        ns = api.createnodeset(createnodes)
+        return None, ns
+
+    def _cmd_createnetwork(self, *, nodeset):
+        return None, api.createnetwork(nodeset)
+
+    def _cmd_addlayer(self, net, name, *, mode=1, directed=False, valued=False):
+        new = api.addlayer(net, str(name), mode=mode, directed=directed,
+                           valued=valued)
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_generate(self, net, name, *, type, seed=0, **params):
+        new = api.generate(net, str(name), type=str(type), seed=seed, **params)
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_checkedge(self, net, layer, u, v):
+        return bool(api.checkedge(net, str(layer), int(u), int(v))), None
+
+    def _cmd_getedge(self, net, layer, u, v):
+        return float(api.getedge(net, str(layer), int(u), int(v))), None
+
+    def _cmd_getnodealters(self, net, u, *, layernames=None, max_alters=4096):
+        names = None
+        if layernames is not None:
+            names = [str(n) for n in (
+                layernames if isinstance(layernames, list) else [layernames]
+            )]
+        alters = api.getnodealters(net, int(u), layernames=names,
+                                   max_alters=int(max_alters))
+        return np.asarray(alters).tolist(), None
+
+    def _cmd_shortestpath(self, net, u, v, *, layernames=None):
+        names = None
+        if layernames is not None:
+            names = [str(n) for n in (
+                layernames if isinstance(layernames, list) else [layernames]
+            )]
+        return api.shortestpath(net, int(u), int(v), layernames=names), None
+
+    def _cmd_memoryreport(self, net):
+        rep = memory_report(net)
+        if self.mode == "json":
+            return {
+                "total_bytes": rep.total_nbytes,
+                "layers": [
+                    {
+                        "name": l.name, "mode": l.mode, "bytes": l.nbytes,
+                        "edges": l.n_edges,
+                        "equivalent_projected_edges":
+                            l.equivalent_projected_edges,
+                        "compression_ratio": l.compression_ratio,
+                    }
+                    for l in rep.layers
+                ],
+            }, None
+        return rep.pretty(), None
+
+    def _cmd_savefile(self, obj, *, file):
+        api.savefile(obj, str(file))
+        return f"saved {file}", None
+
+    def _cmd_loadfile(self, *, file):
+        return None, api.loadfile(str(file))
+
+    # rebinding: commands that 'mutate' a network rebind every name that
+    # pointed at the old object (functional engine, paper-style syntax)
+    def _rebind(self, old, new):
+        for k, v in list(self.env.items()):
+            if v is old:
+                self.env[k] = new
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("script", nargs="?", help="script file (default: stdin)")
+    ap.add_argument("--json", action="store_true", help="JSON output mode")
+    args = ap.parse_args()
+    text = (
+        open(args.script).read() if args.script else sys.stdin.read()
+    )
+    session = Session(mode="json" if args.json else "text")
+    for out in session.run_script(text):
+        print(out)
+
+
+if __name__ == "__main__":
+    main()

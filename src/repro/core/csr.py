@@ -1,0 +1,289 @@
+"""CSR (compressed sparse row) — the TPU-native container for edge lists.
+
+Threadle (C#) stores per-node edge lists in hash sets; the dense-array
+equivalent is CSR with *sorted* columns per row:
+
+  indptr  : int32[n_rows + 1]   row offsets
+  indices : int32[nnz]          column ids, sorted within each row
+  values  : float32[nnz] | None optional edge values (valued layers)
+
+Memory accounting matches the paper's: 4 bytes per edge endpoint.
+Sorted columns replace hashing — membership tests are O(log deg) branchless
+binary searches, which vectorize over query batches.
+
+Construction happens host-side in numpy (generators / file IO); the stored
+arrays are jnp and all query helpers are jit-compatible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pytree import pytree_dataclass
+
+# Padding sentinel for gathered rows: INT32_MAX keeps sorted rows sorted.
+SENTINEL = np.int32(2**31 - 1)
+
+
+@pytree_dataclass(static=("n_rows", "n_cols"))
+class CSR:
+    indptr: jnp.ndarray  # int32[n_rows + 1]
+    indices: jnp.ndarray  # int32[nnz]
+    values: jnp.ndarray | None  # float32[nnz] | None
+    n_rows: int
+    n_cols: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        n = self.indptr.nbytes + self.indices.nbytes
+        if self.values is not None:
+            n += self.values.nbytes
+        return int(n)
+
+    def degrees(self) -> jnp.ndarray:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def max_degree(self) -> int:
+        if self.nnz == 0:
+            return 0
+        return int(np.max(np.asarray(self.degrees())))
+
+
+# ---------------------------------------------------------------------------
+# Construction (host-side numpy)
+# ---------------------------------------------------------------------------
+
+
+def csr_from_coo(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n_rows: int,
+    n_cols: int,
+    values: np.ndarray | None = None,
+    dedup: bool = True,
+    sum_duplicates: bool = False,
+) -> CSR:
+    """Build a CSR from COO pairs. Sorts columns within rows.
+
+    ``dedup`` drops duplicate (row, col) pairs (binary layers);
+    ``sum_duplicates`` accumulates their values instead (valued layers).
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    if rows.shape != cols.shape:
+        raise ValueError("rows/cols shape mismatch")
+    if rows.size:
+        if rows.min() < 0 or rows.max() >= n_rows:
+            raise ValueError("row id out of range")
+        if cols.min() < 0 or cols.max() >= n_cols:
+            raise ValueError("col id out of range")
+
+    key = rows * np.int64(n_cols) + cols
+    order = np.argsort(key, kind="stable")
+    key = key[order]
+    if values is not None:
+        values = np.asarray(values, dtype=np.float32)[order]
+
+    if dedup or sum_duplicates:
+        uniq_mask = np.ones(key.shape, dtype=bool)
+        uniq_mask[1:] = key[1:] != key[:-1]
+        if sum_duplicates and values is not None:
+            seg = np.cumsum(uniq_mask) - 1
+            values = np.bincount(seg, weights=values).astype(np.float32)
+        elif values is not None:
+            values = values[uniq_mask]
+        key = key[uniq_mask]
+
+    r = (key // n_cols).astype(np.int64)
+    c = (key % n_cols).astype(np.int32)
+    counts = np.bincount(r, minlength=n_rows)
+    indptr = np.zeros(n_rows + 1, dtype=np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    if indptr[-1] >= SENTINEL:
+        raise ValueError("nnz exceeds int32 range; shard the layer")
+    return CSR(
+        indptr=jnp.asarray(indptr, dtype=jnp.int32),
+        indices=jnp.asarray(c, dtype=jnp.int32),
+        values=None if values is None else jnp.asarray(values),
+        n_rows=int(n_rows),
+        n_cols=int(n_cols),
+    )
+
+
+def csr_empty(n_rows: int, n_cols: int, valued: bool = False) -> CSR:
+    return CSR(
+        indptr=jnp.zeros(n_rows + 1, dtype=jnp.int32),
+        indices=jnp.zeros((0,), dtype=jnp.int32),
+        values=jnp.zeros((0,), dtype=jnp.float32) if valued else None,
+        n_rows=int(n_rows),
+        n_cols=int(n_cols),
+    )
+
+
+def csr_transpose(csr: CSR) -> CSR:
+    """Host-side transpose (used to derive inbound edges / dual index)."""
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    row_ids = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    vals = None if csr.values is None else np.asarray(csr.values)
+    return csr_from_coo(
+        indices.astype(np.int64),
+        row_ids,
+        n_rows=csr.n_cols,
+        n_cols=csr.n_rows,
+        values=vals,
+        dedup=False,
+    )
+
+
+def csr_row_ids(csr: CSR) -> jnp.ndarray:
+    """Expanded per-edge source row ids, int32[nnz] (for frontier ops)."""
+    indptr = np.asarray(csr.indptr)
+    return jnp.asarray(
+        np.repeat(np.arange(csr.n_rows, dtype=np.int32), np.diff(indptr))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched device-side queries (jit-compatible)
+# ---------------------------------------------------------------------------
+
+
+def bsearch_range(
+    indices: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    target: jnp.ndarray,
+    n_steps: int = 32,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Branchless binary search of ``target`` in ``indices[lo:hi)`` (sorted).
+
+    All of lo/hi/target may be batched with a common shape. Returns
+    (position_of_first_geq, found_mask). ``n_steps=32`` covers any int32
+    range.
+    """
+    lo = lo.astype(jnp.int32)
+    hi0 = hi.astype(jnp.int32)
+    if indices.shape[0] == 0:
+        return lo, jnp.zeros(jnp.broadcast_shapes(lo.shape, target.shape), bool)
+
+    def body(_, state):
+        l, h = state
+        active = l < h
+        mid = (l + h) // 2
+        v = jnp.take(indices, mid, mode="clip")
+        go_right = v < target
+        l = jnp.where(active & go_right, mid + 1, l)
+        h = jnp.where(active & ~go_right, mid, h)
+        return l, h
+
+    l, _ = jax.lax.fori_loop(0, n_steps, body, (lo, hi0))
+    pos = l
+    found = (pos < hi0) & (jnp.take(indices, pos, mode="clip") == target)
+    return pos, found
+
+
+def csr_contains(csr: CSR, rows: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Batched membership test: is (rows[i], cols[i]) an edge? -> bool[B]."""
+    lo = jnp.take(csr.indptr, rows, mode="clip")
+    hi = jnp.take(csr.indptr, rows + 1, mode="clip")
+    _, found = bsearch_range(csr.indices, lo, hi, cols.astype(jnp.int32))
+    return found
+
+
+def csr_value_at(csr: CSR, rows: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Batched edge value lookup; 0.0 when absent / layer unvalued -> f32[B]."""
+    lo = jnp.take(csr.indptr, rows, mode="clip")
+    hi = jnp.take(csr.indptr, rows + 1, mode="clip")
+    pos, found = bsearch_range(csr.indices, lo, hi, cols.astype(jnp.int32))
+    if csr.values is None:
+        return found.astype(jnp.float32)
+    if csr.values.shape[0] == 0:
+        return jnp.zeros(found.shape, jnp.float32)
+    vals = jnp.take(csr.values, pos, mode="clip")
+    return jnp.where(found, vals, 0.0)
+
+
+def csr_row_gather(
+    csr: CSR, rows: jnp.ndarray, max_len: int, fill: int = int(SENTINEL)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather up to ``max_len`` column ids per queried row.
+
+    Returns (cols int32[B, max_len] padded with ``fill``, valid bool mask).
+    Rows longer than max_len are truncated (callers pick max_len from
+    layer metadata when exactness is required).
+    """
+    start = jnp.take(csr.indptr, rows, mode="clip")
+    length = jnp.take(csr.indptr, rows + 1, mode="clip") - start
+    offs = jnp.arange(max_len, dtype=jnp.int32)
+    valid = offs < length[..., None]
+    if csr.indices.shape[0] == 0:
+        return jnp.full(valid.shape, jnp.int32(fill)), jnp.zeros_like(valid)
+    idx = start[..., None] + offs
+    vals = jnp.take(csr.indices, jnp.where(valid, idx, 0), mode="clip")
+    return jnp.where(valid, vals, jnp.int32(fill)), valid
+
+
+def csr_row_sample(
+    csr: CSR, rows: jnp.ndarray, key: jax.Array
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniformly sample one column from each queried row.
+
+    Returns (samples int32[B], valid bool[B]); invalid (empty row) samples
+    return the queried row's own id so callers can 'stay in place'.
+    """
+    if csr.indices.shape[0] == 0:
+        return rows.astype(jnp.int32), jnp.zeros(rows.shape, bool)
+    start = jnp.take(csr.indptr, rows, mode="clip")
+    length = jnp.take(csr.indptr, rows + 1, mode="clip") - start
+    r = jax.random.randint(key, rows.shape, 0, jnp.maximum(length, 1))
+    sample = jnp.take(csr.indices, start + r, mode="clip")
+    valid = length > 0
+    return jnp.where(valid, sample, rows.astype(jnp.int32)), valid
+
+
+def sorted_isin(
+    a: jnp.ndarray, a_valid: jnp.ndarray, b: jnp.ndarray, b_valid: jnp.ndarray
+) -> jnp.ndarray:
+    """For sorted padded rows a[B,Ka], b[B,Kb]: mask of a's entries in b.
+
+    Pad slots (a_valid False) never match. Uses per-element binary search in
+    b (pad SENTINEL keeps b sorted), O(Ka log Kb) — the scalable jnp path;
+    the Pallas kernel (kernels/intersect.py) is the all-pairs VPU variant.
+    """
+    kb = b.shape[-1]
+
+    def search_row(brow, arow):
+        pos = jnp.searchsorted(brow, arow)
+        hit = jnp.take(brow, jnp.clip(pos, 0, kb - 1), mode="clip") == arow
+        return hit & (pos < kb)
+
+    batch_shape = a.shape[:-1]
+    a2 = a.reshape((-1, a.shape[-1]))
+    b2 = b.reshape((-1, kb))
+    hits = jax.vmap(search_row)(b2, a2).reshape(a.shape)
+    return hits & a_valid & (a != SENTINEL)
+
+
+def padded_unique(
+    vals: jnp.ndarray, valid: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort + dedup padded rows. vals[B,K] with pad SENTINEL.
+
+    Returns (sorted vals with duplicates/pads replaced by SENTINEL and
+    pushed to the end, uniq mask).
+    """
+    v = jnp.where(valid, vals, SENTINEL)
+    v = jnp.sort(v, axis=-1)
+    first = jnp.ones(v.shape[:-1] + (1,), dtype=bool)
+    uniq = jnp.concatenate([first, v[..., 1:] != v[..., :-1]], axis=-1)
+    uniq = uniq & (v != SENTINEL)
+    v = jnp.where(uniq, v, SENTINEL)
+    v = jnp.sort(v, axis=-1)
+    return v, v != SENTINEL

@@ -1,0 +1,191 @@
+"""File IO (paper §3.1 'Utilities'): binary serialization + text edge lists.
+
+Binary format: a single ``.npz`` (zlib-compressed, the paper's ``.bin.gz``
+analogue) holding every array under structured keys plus a JSON manifest
+describing layer types, flags, and attribute kinds. Text format: TSV edge /
+membership lists (``.tsv`` / ``.tsv.gz``).
+"""
+
+from __future__ import annotations
+
+import gzip
+import io as _io
+import json
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+
+from .csr import CSR
+from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges, two_mode_from_memberships
+from .network import Network, create_network
+from .nodeset import AttrColumn, AttributeStore, Nodeset
+
+__all__ = [
+    "save_network",
+    "load_network",
+    "export_layer_tsv",
+    "import_layer_tsv",
+]
+
+
+def _pack_csr(arrays: dict, prefix: str, csr: CSR) -> dict:
+    arrays[f"{prefix}.indptr"] = np.asarray(csr.indptr)
+    arrays[f"{prefix}.indices"] = np.asarray(csr.indices)
+    if csr.values is not None:
+        arrays[f"{prefix}.values"] = np.asarray(csr.values)
+    return {"n_rows": csr.n_rows, "n_cols": csr.n_cols,
+            "valued": csr.values is not None}
+
+
+def _unpack_csr(z, prefix: str, meta: dict) -> CSR:
+    return CSR(
+        indptr=jnp.asarray(z[f"{prefix}.indptr"]),
+        indices=jnp.asarray(z[f"{prefix}.indices"]),
+        values=jnp.asarray(z[f"{prefix}.values"]) if meta["valued"] else None,
+        n_rows=meta["n_rows"],
+        n_cols=meta["n_cols"],
+    )
+
+
+def save_network(net: Network, path: str | Path) -> None:
+    arrays: dict[str, np.ndarray] = {}
+    manifest: dict = {"format": "threadle-jax/1", "n_nodes": net.n_nodes,
+                      "layers": [], "attrs": []}
+    for name, layer in zip(net.layer_names, net.layers):
+        key = f"layer.{name}"
+        if isinstance(layer, LayerTwoMode):
+            manifest["layers"].append({
+                "name": name, "mode": 2,
+                "memb": _pack_csr(arrays, f"{key}.memb", layer.memb),
+                "members": _pack_csr(arrays, f"{key}.members", layer.members),
+                "max_memberships": layer.max_memberships,
+                "max_hyperedge_size": layer.max_hyperedge_size,
+            })
+        else:
+            entry = {
+                "name": name, "mode": 1,
+                "out": _pack_csr(arrays, f"{key}.out", layer.out),
+                "directed": layer.directed, "valued": layer.valued,
+                "allow_self": layer.allow_self,
+                "store_inbound": layer.store_inbound,
+                "has_in": layer.in_ is not None,
+            }
+            if layer.in_ is not None:
+                entry["in"] = _pack_csr(arrays, f"{key}.in", layer.in_)
+            manifest["layers"].append(entry)
+    for aname, col in zip(net.nodeset.attrs.names, net.nodeset.attrs.columns):
+        arrays[f"attr.{aname}.ids"] = np.asarray(col.node_ids)
+        arrays[f"attr.{aname}.values"] = np.asarray(col.values)
+        manifest["attrs"].append({"name": aname, "kind": col.kind})
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8
+    )
+    np.savez_compressed(Path(path), **arrays)
+
+
+def load_network(path: str | Path) -> Network:
+    z = np.load(Path(path))
+    manifest = json.loads(bytes(z["__manifest__"]).decode())
+    if manifest.get("format") != "threadle-jax/1":
+        raise ValueError(f"unknown file format in {path}")
+    net = create_network(int(manifest["n_nodes"]))
+    ns = net.nodeset
+    for a in manifest["attrs"]:
+        col = AttrColumn(
+            node_ids=jnp.asarray(z[f"attr.{a['name']}.ids"]),
+            values=jnp.asarray(z[f"attr.{a['name']}.values"]),
+            kind=a["kind"],
+        )
+        ns = Nodeset(attrs=ns.attrs.with_column(a["name"], col),
+                     n_nodes=ns.n_nodes)
+    net = Network(nodeset=ns, layers=(), layer_names=())
+    for entry in manifest["layers"]:
+        key = f"layer.{entry['name']}"
+        if entry["mode"] == 2:
+            layer = LayerTwoMode(
+                memb=_unpack_csr(z, f"{key}.memb", entry["memb"]),
+                members=_unpack_csr(z, f"{key}.members", entry["members"]),
+                max_memberships=entry["max_memberships"],
+                max_hyperedge_size=entry["max_hyperedge_size"],
+            )
+        else:
+            layer = LayerOneMode(
+                out=_unpack_csr(z, f"{key}.out", entry["out"]),
+                in_=_unpack_csr(z, f"{key}.in", entry["in"])
+                if entry["has_in"] else None,
+                directed=entry["directed"], valued=entry["valued"],
+                allow_self=entry["allow_self"],
+                store_inbound=entry["store_inbound"],
+            )
+        net = net.with_layer(entry["name"], layer)
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Text IO
+# ---------------------------------------------------------------------------
+
+
+def _open_text(path: Path, mode: str):
+    if str(path).endswith(".gz"):
+        return gzip.open(path, mode + "t")
+    return open(path, mode)
+
+
+def export_layer_tsv(net: Network, layer_name: str, path: str | Path) -> None:
+    """One-mode: ``src\\tdst[\\tvalue]`` rows; two-mode: ``node\\thyperedge``."""
+    layer = net.layer(layer_name)
+    path = Path(path)
+    with _open_text(path, "w") as f:
+        if isinstance(layer, LayerTwoMode):
+            indptr = np.asarray(layer.memb.indptr)
+            idx = np.asarray(layer.memb.indices)
+            for u in range(layer.n_nodes):
+                for h in idx[indptr[u] : indptr[u + 1]]:
+                    f.write(f"{u}\t{h}\n")
+        else:
+            indptr = np.asarray(layer.out.indptr)
+            idx = np.asarray(layer.out.indices)
+            vals = None if layer.out.values is None else np.asarray(layer.out.values)
+            for u in range(layer.n_nodes):
+                for k in range(indptr[u], indptr[u + 1]):
+                    v = idx[k]
+                    if not layer.directed and v < u:
+                        continue  # write each undirected edge once
+                    if vals is None:
+                        f.write(f"{u}\t{v}\n")
+                    else:
+                        f.write(f"{u}\t{v}\t{vals[k]}\n")
+
+
+def import_layer_tsv(
+    path: str | Path,
+    n_nodes: int,
+    mode: int = 1,
+    directed: bool = False,
+    valued: bool = False,
+    n_hyperedges: int | None = None,
+):
+    """Inverse of export_layer_tsv. Returns a layer object."""
+    path = Path(path)
+    src, dst, vals = [], [], []
+    with _open_text(path, "r") as f:
+        for line in f:
+            parts = line.rstrip("\n").split("\t")
+            if len(parts) < 2:
+                continue
+            src.append(int(parts[0]))
+            dst.append(int(parts[1]))
+            if valued and len(parts) > 2:
+                vals.append(float(parts[2]))
+    src_a = np.asarray(src, dtype=np.int64)
+    dst_a = np.asarray(dst, dtype=np.int64)
+    if mode == 2:
+        h = n_hyperedges if n_hyperedges is not None else int(dst_a.max()) + 1
+        return two_mode_from_memberships(n_nodes, h, src_a, dst_a)
+    return one_mode_from_edges(
+        n_nodes, src_a, dst_a,
+        values=np.asarray(vals, dtype=np.float32) if vals else None,
+        directed=directed,
+    )

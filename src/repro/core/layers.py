@@ -1,0 +1,319 @@
+"""Network layers: one-mode (unipartite) and two-mode (hyperedge) storage.
+
+This is the paper's central design, adapted to dense arrays:
+
+* ``LayerOneMode`` — per-node edge lists as CSR; configurable directionality,
+  valuation, self-ties; inbound storage can be disabled (halves memory, for
+  random-walker workloads — paper §3.2).
+* ``LayerTwoMode`` — a set of hyperedges with a **dual index** (paper §3.3):
+  node→memberships CSR and hyperedge→members CSR. Queries go through the
+  *same interface* as one-mode layers (pseudo-projection): edge existence is
+  "share ≥1 hyperedge", edge value is "count of shared hyperedges", alters
+  are "union of co-members" — the projection is never materialized.
+
+Both classes implement the ``check_edge / edge_value / node_alters /
+sample_neighbor / degrees`` protocol (the paper's shared interface), so
+multilayer operations never branch on mode at the call site.
+
+All query methods are batched (arrays of node ids); scalar usage is just a
+size-1 batch.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pytree import pytree_dataclass, replace
+from .csr import (
+    CSR,
+    SENTINEL,
+    csr_contains,
+    csr_empty,
+    csr_from_coo,
+    csr_row_gather,
+    csr_row_sample,
+    csr_transpose,
+    csr_value_at,
+    padded_unique,
+    sorted_isin,
+)
+
+__all__ = [
+    "LayerOneMode",
+    "LayerTwoMode",
+    "one_mode_from_edges",
+    "two_mode_from_memberships",
+]
+
+
+# ---------------------------------------------------------------------------
+# One-mode layers
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass(static=("directed", "valued", "allow_self", "store_inbound"))
+class LayerOneMode:
+    """Unipartite layer: CSR out-edges (+ optional CSR in-edges).
+
+    Symmetric layers store each undirected edge in both rows (so ``out`` is
+    its own transpose and ``in_`` is None). Directed layers keep a separate
+    inbound CSR unless ``store_inbound=False`` (paper's memory switch).
+    """
+
+    out: CSR
+    in_: CSR | None
+    directed: bool
+    valued: bool
+    allow_self: bool
+    store_inbound: bool
+
+    # -- shared query interface (pseudo-projection-compatible) -------------
+
+    @property
+    def mode(self) -> int:
+        return 1
+
+    @property
+    def n_nodes(self) -> int:
+        return self.out.n_rows
+
+    @property
+    def n_edges(self) -> int:
+        """Logical edge count (undirected edges counted once)."""
+        return self.out.nnz if self.directed else self.out.nnz // 2
+
+    def check_edge(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        return csr_contains(self.out, u, v)
+
+    def edge_value(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        return csr_value_at(self.out, u, v)
+
+    def node_alters(
+        self, u: jnp.ndarray, max_alters: int, inbound: bool = False
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Padded outbound (or inbound) neighbor lists -> (int32[B,K], mask)."""
+        csr = self._in_csr() if inbound else self.out
+        return csr_row_gather(csr, u, max_alters)
+
+    def sample_neighbor(
+        self, u: jnp.ndarray, key: jax.Array
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Uniform random out-neighbor per query node (random walk step)."""
+        return csr_row_sample(self.out, u, key)
+
+    def degrees(self) -> jnp.ndarray:
+        return self.out.degrees()
+
+    def max_degree(self) -> int:
+        return self.out.max_degree()
+
+    # -- misc ---------------------------------------------------------------
+
+    def _in_csr(self) -> CSR:
+        if not self.directed:
+            return self.out
+        if self.in_ is None:
+            raise ValueError(
+                "inbound edges not stored (store_inbound=False); "
+                "re-import the layer with inbound storage enabled"
+            )
+        return self.in_
+
+    @property
+    def nbytes(self) -> int:
+        n = self.out.nbytes
+        if self.in_ is not None:
+            n += self.in_.nbytes
+        return n
+
+    def drop_inbound(self) -> "LayerOneMode":
+        """Paper §3.2: disable inbound storage, ~halving directed-layer memory."""
+        return replace(self, in_=None, store_inbound=False)
+
+
+def one_mode_from_edges(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    values: np.ndarray | None = None,
+    directed: bool = False,
+    allow_self: bool = False,
+    store_inbound: bool = True,
+    sum_duplicates: bool = False,
+) -> LayerOneMode:
+    """Build a one-mode layer from an edge list (host-side)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if values is not None:
+        values = np.asarray(values, dtype=np.float32)
+    if not allow_self:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if values is not None:
+            values = values[keep]
+    if not directed:
+        # store both directions; csr_from_coo dedups (u,v) repeats
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if values is not None:
+            values = np.concatenate([values, values])
+    out = csr_from_coo(
+        src, dst, n_nodes, n_nodes, values=values,
+        dedup=not sum_duplicates, sum_duplicates=sum_duplicates,
+    )
+    in_ = None
+    if directed and store_inbound:
+        in_ = csr_transpose(out)
+    return LayerOneMode(
+        out=out,
+        in_=in_,
+        directed=directed,
+        valued=values is not None,
+        allow_self=allow_self,
+        store_inbound=store_inbound,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-mode layers (pseudo-projection)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass(static=("max_memberships", "max_hyperedge_size"))
+class LayerTwoMode:
+    """Bipartite/affiliation layer stored as hyperedge memberships.
+
+    Dual index (paper §3.3):
+      memb    : CSR node -> hyperedge ids   (N rows, H cols)
+      members : CSR hyperedge -> node ids   (H rows, N cols)
+
+    ``max_memberships`` / ``max_hyperedge_size`` are construction-time row
+    maxima — the static padding bounds used by batched queries.
+    """
+
+    memb: CSR
+    members: CSR
+    max_memberships: int
+    max_hyperedge_size: int
+
+    @property
+    def mode(self) -> int:
+        return 2
+
+    @property
+    def n_nodes(self) -> int:
+        return self.memb.n_rows
+
+    @property
+    def n_hyperedges(self) -> int:
+        return self.members.n_rows
+
+    @property
+    def n_memberships(self) -> int:
+        return self.memb.nnz
+
+    @property
+    def nbytes(self) -> int:
+        return self.memb.nbytes + self.members.nbytes
+
+    # -- pseudo-projection queries (paper Listing 1, batched) ---------------
+
+    def memberships(
+        self, u: jnp.ndarray, max_len: int | None = None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        k = self.max_memberships if max_len is None else max_len
+        return csr_row_gather(self.memb, u, max(k, 1))
+
+    def check_edge(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        """Pseudo-projected edge existence: do u and v share a hyperedge?"""
+        return self.edge_value(u, v) > 0
+
+    def edge_value(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        """Pseudo-projected edge value: number of shared hyperedges (f32[B])."""
+        a, am = self.memberships(u)
+        b, bm = self.memberships(v)
+        hits = sorted_isin(a, am, b, bm)
+        return jnp.sum(hits, axis=-1).astype(jnp.float32)
+
+    def node_alters(
+        self, u: jnp.ndarray, max_alters: int, inbound: bool = False
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Pseudo-projected alters: union of co-members across u's hyperedges.
+
+        Returns (int32[B, max_alters] sorted padded, mask). The union is
+        computed over up to max_memberships × max_hyperedge_size gathered
+        slots then deduped by sort — capped at ``max_alters`` outputs.
+        """
+        he, he_mask = self.memberships(u)  # (B, Km)
+        mem, mem_mask = csr_row_gather(
+            self.members, jnp.where(he_mask, he, 0), self.max_hyperedge_size
+        )  # (B, Km, Kn)
+        mem_mask = mem_mask & he_mask[..., None]
+        flat = jnp.where(mem_mask, mem, SENTINEL).reshape(u.shape + (-1,))
+        flat = jnp.where(flat == u[..., None], SENTINEL, flat)  # drop ego
+        uniq, uniq_mask = padded_unique(flat, flat != SENTINEL)
+        return uniq[..., :max_alters], uniq_mask[..., :max_alters]
+
+    def sample_neighbor(
+        self, u: jnp.ndarray, key: jax.Array
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Pseudo-projected walk step without computing alters (DESIGN §4.3).
+
+        Sample hyperedge h uniformly from u's memberships, then a member v of
+        h uniformly. This draws from the projected neighborhood with weight
+        ∝ Σ_{shared h} 1/k_h (Newman-style 1/size weighting) in O(1) — the
+        projection is never formed. Self-draws (v == u) are resampled once,
+        then kept as 'stay' if unlucky (documented bias ~1/k_h).
+        """
+        k1, k2, k3 = jax.random.split(key, 3)
+        he, he_valid = csr_row_sample(self.memb, u, k1)
+        v, m_valid = csr_row_sample(self.members, jnp.where(he_valid, he, 0), k2)
+        # one resample round for self-draws
+        v2, _ = csr_row_sample(self.members, jnp.where(he_valid, he, 0), k3)
+        v = jnp.where(v == u, v2, v)
+        valid = he_valid & m_valid
+        return jnp.where(valid, v, u.astype(jnp.int32)), valid
+
+    def degrees(self) -> jnp.ndarray:
+        """Membership counts per node (bipartite degree, not projected)."""
+        return self.memb.degrees()
+
+    def max_degree(self) -> int:
+        return self.memb.max_degree()
+
+    def hyperedge_sizes(self) -> jnp.ndarray:
+        return self.members.degrees()
+
+    def equivalent_projected_edges(self) -> int:
+        """Σ_h k_h(k_h−1)/2 — paper Eq. (1): size of the never-built projection."""
+        k = np.asarray(self.members.degrees(), dtype=np.int64)
+        return int(np.sum(k * (k - 1) // 2))
+
+
+def two_mode_from_memberships(
+    n_nodes: int,
+    n_hyperedges: int,
+    node_ids: np.ndarray,
+    hyperedge_ids: np.ndarray,
+) -> LayerTwoMode:
+    """Build a two-mode layer from (node, hyperedge) membership pairs."""
+    node_ids = np.asarray(node_ids, dtype=np.int64)
+    hyperedge_ids = np.asarray(hyperedge_ids, dtype=np.int64)
+    memb = csr_from_coo(node_ids, hyperedge_ids, n_nodes, n_hyperedges)
+    members = csr_transpose(memb)
+    return LayerTwoMode(
+        memb=memb,
+        members=members,
+        max_memberships=max(memb.max_degree(), 1),
+        max_hyperedge_size=max(members.max_degree(), 1),
+    )
+
+
+def two_mode_empty(n_nodes: int, n_hyperedges: int) -> LayerTwoMode:
+    return LayerTwoMode(
+        memb=csr_empty(n_nodes, n_hyperedges),
+        members=csr_empty(n_hyperedges, n_nodes),
+        max_memberships=1,
+        max_hyperedge_size=1,
+    )

@@ -1,0 +1,84 @@
+"""Memory accounting — reproduces the paper's Table 1 methodology.
+
+``memory_report(net)`` sums actual array nbytes per layer, computes each
+two-mode layer's equivalent projected edge count (paper Eq. 1) and the
+compression ratio of pseudo-projection storage vs a materialized 8 B/edge
+projection.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .layers import LayerTwoMode
+from .network import Network
+from .projection import projection_nbytes
+
+__all__ = ["memory_report", "MemoryReport"]
+
+
+@dataclass
+class LayerReport:
+    name: str
+    mode: int
+    nbytes: int
+    n_edges: int  # one-mode: edges; two-mode: memberships
+    equivalent_projected_edges: int = 0
+    projection_nbytes: int = 0
+    compression_ratio: float = 1.0
+
+
+@dataclass
+class MemoryReport:
+    total_nbytes: int
+    nodeset_nbytes: int
+    layers: list[LayerReport] = field(default_factory=list)
+
+    def pretty(self) -> str:
+        lines = [
+            f"{'layer':<18}{'mode':>5}{'MB':>12}{'edges/memb':>16}"
+            f"{'eq. projected':>18}{'ratio':>12}"
+        ]
+        for l in self.layers:
+            ratio = f"{l.compression_ratio:,.0f}:1" if l.mode == 2 else "-"
+            eq = f"{l.equivalent_projected_edges:,}" if l.mode == 2 else "-"
+            lines.append(
+                f"{l.name:<18}{l.mode:>5}{l.nbytes / 2**20:>12.1f}"
+                f"{l.n_edges:>16,}{eq:>18}{ratio:>12}"
+            )
+        lines.append(
+            f"{'nodeset attrs':<18}{'':>5}{self.nodeset_nbytes / 2**20:>12.1f}"
+        )
+        lines.append(f"TOTAL {self.total_nbytes / 2**20:,.1f} MB")
+        return "\n".join(lines)
+
+
+def memory_report(net: Network) -> MemoryReport:
+    reports = []
+    for name, layer in zip(net.layer_names, net.layers):
+        if isinstance(layer, LayerTwoMode):
+            eq = layer.equivalent_projected_edges()
+            proj = projection_nbytes(layer)
+            reports.append(
+                LayerReport(
+                    name=name,
+                    mode=2,
+                    nbytes=layer.nbytes,
+                    n_edges=layer.n_memberships,
+                    equivalent_projected_edges=eq,
+                    projection_nbytes=proj,
+                    compression_ratio=proj / max(layer.nbytes, 1),
+                )
+            )
+        else:
+            reports.append(
+                LayerReport(
+                    name=name, mode=1, nbytes=layer.nbytes,
+                    n_edges=layer.n_edges,
+                )
+            )
+    return MemoryReport(
+        total_nbytes=net.nbytes,
+        nodeset_nbytes=net.nodeset.nbytes,
+        layers=reports,
+    )

@@ -1,0 +1,159 @@
+"""Nodesets and the sparse node-attribute manager.
+
+Paper §3.1: attribute availability in register data is heterogeneous (income
+only for adults, workplace only for the employed, ...). Storing nulls for
+absent values wastes memory at population scale, so Threadle stores values
+only for nodes that possess them and supports four compact types: 32-bit
+int, 32-bit float, boolean, single character.
+
+Dense-array adaptation: each attribute is a sparse column —
+(sorted node_ids int32[k], values dtype[k]) — lookups are vectorized binary
+searches; absent values come back masked. The C# engine migrates nodes
+between hashset and dict storage; our equivalent economics is that a node
+costs 0 bytes in a column it has no value in.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pytree import pytree_dataclass
+
+_ATTR_DTYPES = {
+    "int": jnp.int32,
+    "float": jnp.float32,
+    "bool": jnp.bool_,
+    "char": jnp.uint8,
+}
+
+_DEFAULTS = {
+    "int": np.int32(0),
+    "float": np.float32(np.nan),
+    "bool": np.bool_(False),
+    "char": np.uint8(0),
+}
+
+
+@pytree_dataclass(static=("kind",))
+class AttrColumn:
+    node_ids: jnp.ndarray  # int32[k], sorted ascending
+    values: jnp.ndarray  # kind-typed [k]
+    kind: str  # 'int' | 'float' | 'bool' | 'char'
+
+    @property
+    def n_set(self) -> int:
+        return int(self.node_ids.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.node_ids.nbytes + self.values.nbytes)
+
+    def get(self, nodes: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched lookup -> (values[B], has_mask[B])."""
+        k = self.node_ids.shape[0]
+        if k == 0:
+            fill = jnp.full(nodes.shape, _DEFAULTS[self.kind])
+            return fill, jnp.zeros(nodes.shape, dtype=bool)
+        pos = jnp.searchsorted(self.node_ids, nodes.astype(jnp.int32))
+        posc = jnp.clip(pos, 0, k - 1)
+        has = (pos < k) & (jnp.take(self.node_ids, posc) == nodes)
+        vals = jnp.take(self.values, posc)
+        return jnp.where(has, vals, jnp.asarray(_DEFAULTS[self.kind])), has
+
+
+def attr_column(kind: str, node_ids: np.ndarray, values: np.ndarray) -> AttrColumn:
+    if kind not in _ATTR_DTYPES:
+        raise ValueError(f"unknown attribute kind {kind!r}; use {list(_ATTR_DTYPES)}")
+    node_ids = np.asarray(node_ids, dtype=np.int32)
+    order = np.argsort(node_ids, kind="stable")
+    node_ids = node_ids[order]
+    if node_ids.size and np.any(node_ids[1:] == node_ids[:-1]):
+        # last write wins, like dict assignment
+        keep = np.ones(node_ids.shape, dtype=bool)
+        keep[:-1] = node_ids[:-1] != node_ids[1:]
+        order = order[keep]
+        node_ids = node_ids[keep]
+    values = np.asarray(values)[order].astype(_ATTR_DTYPES[kind])
+    return AttrColumn(
+        node_ids=jnp.asarray(node_ids),
+        values=jnp.asarray(values),
+        kind=kind,
+    )
+
+
+@pytree_dataclass(static=("names",))
+class AttributeStore:
+    columns: tuple[AttrColumn, ...]
+    names: tuple[str, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.columns)
+
+    def column(self, name: str) -> AttrColumn:
+        try:
+            return self.columns[self.names.index(name)]
+        except ValueError:
+            raise KeyError(f"no attribute {name!r}; have {self.names}") from None
+
+    def get(self, name: str, nodes: jnp.ndarray):
+        return self.column(name).get(nodes)
+
+    def with_column(self, name: str, col: AttrColumn) -> "AttributeStore":
+        if name in self.names:
+            i = self.names.index(name)
+            cols = self.columns[:i] + (col,) + self.columns[i + 1 :]
+            return AttributeStore(columns=cols, names=self.names)
+        return AttributeStore(
+            columns=self.columns + (col,), names=self.names + (name,)
+        )
+
+    def without_column(self, name: str) -> "AttributeStore":
+        i = self.names.index(name)
+        return AttributeStore(
+            columns=self.columns[:i] + self.columns[i + 1 :],
+            names=self.names[:i] + self.names[i + 1 :],
+        )
+
+
+def empty_attrs() -> AttributeStore:
+    return AttributeStore(columns=(), names=())
+
+
+@pytree_dataclass(static=("n_nodes",))
+class Nodeset:
+    """Node universe: contiguous internal ids 0..n_nodes-1 + attributes.
+
+    The paper identifies nodes by arbitrary unsigned ints; our internal ids
+    are contiguous (array indices). An optional external-id column
+    ('ext_id') can be attached as a normal int attribute when importing
+    non-contiguous data.
+    """
+
+    attrs: AttributeStore
+    n_nodes: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.attrs.nbytes
+
+    def get_attr(self, name: str, nodes: jnp.ndarray):
+        return self.attrs.get(name, nodes)
+
+    def set_attr(
+        self, name: str, kind: str, node_ids: np.ndarray, values: np.ndarray
+    ) -> "Nodeset":
+        ids = np.asarray(node_ids)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_nodes):
+            raise ValueError("attribute node id out of range")
+        col = attr_column(kind, ids, values)
+        return Nodeset(attrs=self.attrs.with_column(name, col), n_nodes=self.n_nodes)
+
+    def drop_attr(self, name: str) -> "Nodeset":
+        return Nodeset(attrs=self.attrs.without_column(name), n_nodes=self.n_nodes)
+
+
+def create_nodeset(n_nodes: int) -> Nodeset:
+    return Nodeset(attrs=empty_attrs(), n_nodes=int(n_nodes))

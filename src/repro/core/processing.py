@@ -1,0 +1,130 @@
+"""Network transformations (paper §3.1 'Processing' area).
+
+symmetrize / dichotomize / filter, operating host-side (they rebuild CSR
+storage) — transformations are construction-time operations, queries are
+the device-side hot path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSR
+from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges, two_mode_from_memberships
+
+__all__ = ["symmetrize", "dichotomize", "filter_edges", "subgraph_layer"]
+
+
+def _coo(csr: CSR) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    indptr = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    cols = np.asarray(csr.indices, dtype=np.int64)
+    vals = None if csr.values is None else np.asarray(csr.values)
+    return rows, cols, vals
+
+
+def symmetrize(layer: LayerOneMode, method: str = "max") -> LayerOneMode:
+    """Directed -> symmetric. method: 'max' | 'min' | 'sum' | 'or'.
+
+    'or': binary union. 'min': keep only reciprocated ties (value = min).
+    """
+    rows, cols, vals = _coo(layer.out)
+    if vals is None:
+        vals = np.ones(rows.shape, dtype=np.float32)
+    n = layer.out.n_rows
+    both = np.concatenate([rows * n + cols, cols * n + rows])
+    v2 = np.concatenate([vals, vals])
+    order = np.argsort(both, kind="stable")
+    both, v2 = both[order], v2[order]
+    uniq, inv = np.unique(both, return_inverse=True)
+    if method == "sum":
+        agg = np.bincount(inv, weights=v2)
+        # self-pairs got doubled by mirroring
+        r, c = uniq // n, uniq % n
+        agg = np.where(r == c, agg / 2, agg)
+    elif method == "max" or method == "or":
+        agg = np.full(uniq.shape, -np.inf)
+        np.maximum.at(agg, inv, v2)
+    elif method == "min":
+        counts = np.bincount(inv)
+        agg = np.full(uniq.shape, np.inf)
+        np.minimum.at(agg, inv, v2)
+        r, c = uniq // n, uniq % n
+        keep = (counts == 2) | (r == c)
+        uniq, agg = uniq[keep], agg[keep]
+    else:
+        raise ValueError(f"unknown symmetrize method {method!r}")
+    r, c = uniq // n, uniq % n
+    keep = r <= c  # one copy per undirected pair; builder mirrors
+    values = None if method == "or" and not layer.valued else agg[keep].astype(np.float32)
+    if not layer.valued:
+        values = None
+    return one_mode_from_edges(
+        n, r[keep], c[keep], values=values,
+        directed=False, allow_self=layer.allow_self,
+    )
+
+
+def dichotomize(
+    layer: LayerOneMode, threshold: float = 0.0, op: str = "gt"
+) -> LayerOneMode:
+    """Valued -> binary: keep edges with value {gt|ge|lt|le} threshold."""
+    rows, cols, vals = _coo(layer.out)
+    if vals is None:
+        vals = np.ones(rows.shape, dtype=np.float32)
+    keep = {
+        "gt": vals > threshold,
+        "ge": vals >= threshold,
+        "lt": vals < threshold,
+        "le": vals <= threshold,
+    }[op]
+    rows, cols = rows[keep], cols[keep]
+    if not layer.directed:
+        m = rows <= cols
+        rows, cols = rows[m], cols[m]
+    return one_mode_from_edges(
+        layer.out.n_rows, rows, cols, values=None,
+        directed=layer.directed, allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )
+
+
+def filter_edges(layer: LayerOneMode, min_value: float) -> LayerOneMode:
+    """Drop edges below min_value, keeping values (valued filter)."""
+    rows, cols, vals = _coo(layer.out)
+    if vals is None:
+        raise ValueError("filter_edges requires a valued layer")
+    keep = vals >= min_value
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    if not layer.directed:
+        m = rows <= cols
+        rows, cols, vals = rows[m], cols[m], vals[m]
+    return one_mode_from_edges(
+        layer.out.n_rows, rows, cols, values=vals,
+        directed=layer.directed, allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )
+
+
+def subgraph_layer(layer, node_mask: np.ndarray):
+    """Restrict a layer to nodes where node_mask[i] is True (ids preserved)."""
+    node_mask = np.asarray(node_mask, dtype=bool)
+    if isinstance(layer, LayerTwoMode):
+        rows, cols, _ = _coo(layer.memb)
+        keep = node_mask[rows]
+        return two_mode_from_memberships(
+            layer.n_nodes, layer.n_hyperedges, rows[keep], cols[keep]
+        )
+    rows, cols, vals = _coo(layer.out)
+    keep = node_mask[rows] & node_mask[cols]
+    rows, cols = rows[keep], cols[keep]
+    vals = None if vals is None else vals[keep]
+    if not layer.directed:
+        m = rows <= cols
+        rows, cols = rows[m], cols[m]
+        vals = None if vals is None else vals[m]
+    return one_mode_from_edges(
+        layer.out.n_rows, rows, cols, values=vals,
+        directed=layer.directed, allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )

@@ -1,0 +1,58 @@
+"""Materialized one-mode projection — the baseline the paper argues against.
+
+Expands each hyperedge of k nodes into k(k−1)/2 weighted edges. Memory-
+prohibitive at scale (the whole point of pseudo-projection); provided as
+
+* the correctness ORACLE for pseudo-projection tests (small graphs), and
+* the memory BASELINE for the compression-ratio benchmark (Table 1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges
+
+__all__ = ["project_two_mode", "projection_nbytes"]
+
+
+def project_two_mode(
+    layer: LayerTwoMode, max_edges: int = 50_000_000
+) -> LayerOneMode:
+    """Materialize the one-mode projection (values = shared-hyperedge counts).
+
+    Refuses to build projections above ``max_edges`` expanded pairs — at
+    paper scale (~8e12 pairs ≈ 64 TB) this is exactly the infeasibility the
+    engine avoids.
+    """
+    eq = layer.equivalent_projected_edges()
+    if eq > max_edges:
+        raise MemoryError(
+            f"projection would materialize {eq:,} edges "
+            f"(~{eq * 8 / 2**40:.1f} TiB at 8 B/edge); this is the paper's "
+            "projection problem — use pseudo-projection queries instead"
+        )
+    indptr = np.asarray(layer.members.indptr)
+    members = np.asarray(layer.members.indices)
+    srcs, dsts = [], []
+    for h in range(layer.n_hyperedges):
+        nodes = members[indptr[h] : indptr[h + 1]]
+        if nodes.size < 2:
+            continue
+        i, j = np.triu_indices(nodes.size, k=1)
+        srcs.append(nodes[i])
+        dsts.append(nodes[j])
+    if not srcs:
+        return one_mode_from_edges(layer.n_nodes, [], [], directed=False)
+    src = np.concatenate(srcs).astype(np.int64)
+    dst = np.concatenate(dsts).astype(np.int64)
+    vals = np.ones(src.shape, dtype=np.float32)
+    return one_mode_from_edges(
+        layer.n_nodes, src, dst, values=vals,
+        directed=False, sum_duplicates=True,
+    )
+
+
+def projection_nbytes(layer: LayerTwoMode, bytes_per_edge: int = 8) -> int:
+    """Memory the materialized projection would need (paper Eq. 1 costing)."""
+    return layer.equivalent_projected_edges() * bytes_per_edge

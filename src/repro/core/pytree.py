@@ -1,0 +1,44 @@
+"""Tiny pytree-dataclass helper (no flax dependency).
+
+Every core data structure (CSR, layers, networks) is a frozen dataclass
+registered as a JAX pytree so it can flow through jit / pjit / shard_map and
+be donated. Static (non-array) configuration fields are declared via the
+``static=`` argument and become pytree *metadata* (part of the treedef hash).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def pytree_dataclass(cls: type | None = None, *, static: tuple[str, ...] = ()):
+    """Decorator: frozen dataclass registered as a JAX pytree.
+
+    Fields listed in ``static`` are treated as metadata (hashable python
+    values: ints, bools, strings, tuples); all other fields are children
+    (arrays or nested pytrees, ``None`` allowed).
+    """
+
+    def wrap(c: type[_T]) -> type[_T]:
+        c = dataclasses.dataclass(frozen=True)(c)
+        names = [f.name for f in dataclasses.fields(c)]
+        for s in static:
+            if s not in names:
+                raise ValueError(f"static field {s!r} not in {c.__name__}")
+        data_fields = [n for n in names if n not in static]
+        jax.tree_util.register_dataclass(c, data_fields, list(static))
+        return c
+
+    if cls is not None:
+        return wrap(cls)
+    return wrap
+
+
+def replace(obj: _T, **changes: Any) -> _T:
+    """dataclasses.replace that works on our frozen pytree dataclasses."""
+    return dataclasses.replace(obj, **changes)

@@ -1,0 +1,197 @@
+"""Device-sharded graph queries — removing the paper's single-machine limit.
+
+The paper (§6) lists "single-machine architecture" as Threadle's main
+limitation. This module shards a two-mode layer's node→membership CSR by
+node range across the mesh's data axis and runs pseudo-projection queries
+with an owner-computes pattern under ``shard_map``:
+
+* each device holds the membership rows of its node range (balanced
+  contiguous partition, re-indexed to local ids);
+* a query batch (u[], v[]) is broadcast; every device answers the subset
+  it owns for ``u`` via its local rows plus a *replicated* hyperedge→
+  member index for the second hop (hyperedge directory ≪ membership data
+  in the paper's regime: 10k hyperedges vs 400M memberships);
+* results combine with a masked ``psum`` — one small collective per batch.
+
+This is the engine-side analogue of the framework's DP sharding: storage
+scales with devices, query latency stays one collective deep. Walk
+batches route the same way (sample locally, psum-select by owner).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .csr import SENTINEL, csr_from_coo
+from .layers import LayerTwoMode
+from .pytree import pytree_dataclass
+
+
+@pytree_dataclass(static=("n_nodes", "n_shards", "rows_per_shard", "max_memberships"))
+class ShardedTwoMode:
+    """Node-range-sharded memberships + replicated member directory.
+
+    memb_indptr  : int32[n_shards, rows_per_shard + 1] (local offsets)
+    memb_indices : int32[n_shards, max_local_nnz] (hyperedge ids, padded)
+    members      : replicated hyperedge->node CSR arrays
+    """
+
+    memb_indptr: jnp.ndarray
+    memb_indices: jnp.ndarray
+    members_indptr: jnp.ndarray
+    members_indices: jnp.ndarray
+    n_nodes: int
+    n_shards: int
+    rows_per_shard: int
+    max_memberships: int
+
+
+def shard_two_mode(layer: LayerTwoMode, n_shards: int) -> ShardedTwoMode:
+    """Partition a LayerTwoMode by contiguous node ranges (host-side)."""
+    n = layer.n_nodes
+    rows = -(-n // n_shards)  # ceil
+    indptr = np.asarray(layer.memb.indptr)
+    indices = np.asarray(layer.memb.indices)
+
+    local_ptrs, local_idx = [], []
+    max_nnz = 0
+    for s in range(n_shards):
+        lo, hi = s * rows, min((s + 1) * rows, n)
+        base = indptr[lo]
+        ptr = indptr[lo : hi + 1] - base
+        ptr = np.pad(ptr, (0, rows + 1 - len(ptr)), mode="edge")
+        idx = indices[indptr[lo] : indptr[hi]]
+        max_nnz = max(max_nnz, len(idx))
+        local_ptrs.append(ptr)
+        local_idx.append(idx)
+    pad_idx = np.full((n_shards, max(max_nnz, 1)), SENTINEL, dtype=np.int32)
+    for s, idx in enumerate(local_idx):
+        pad_idx[s, : len(idx)] = idx
+
+    return ShardedTwoMode(
+        memb_indptr=jnp.asarray(np.stack(local_ptrs).astype(np.int32)),
+        memb_indices=jnp.asarray(pad_idx),
+        members_indptr=layer.members.indptr,
+        members_indices=layer.members.indices,
+        n_nodes=n,
+        n_shards=n_shards,
+        rows_per_shard=rows,
+        max_memberships=layer.max_memberships,
+    )
+
+
+def _local_rows(indptr, indices, local_u, valid, k):
+    """Gather up to k membership slots for local row ids (padded)."""
+    start = jnp.take(indptr, jnp.clip(local_u, 0, indptr.shape[0] - 1))
+    length = jnp.take(indptr, jnp.clip(local_u + 1, 0, indptr.shape[0] - 1)) - start
+    offs = jnp.arange(k, dtype=jnp.int32)
+    gather_at = start[:, None] + offs[None, :]
+    ok = (offs[None, :] < length[:, None]) & valid[:, None]
+    vals = jnp.take(indices, jnp.where(ok, gather_at, 0), mode="clip")
+    return jnp.where(ok, vals, SENTINEL)
+
+
+def make_sharded_edge_value(graph: ShardedTwoMode, mesh: Mesh, axis: str = "data"):
+    """Build a jit'd batched pseudo-projection edge_value over the mesh.
+
+    Returns fn(u int32[B], v int32[B]) -> f32[B]. Each device resolves the
+    membership rows of nodes IT owns, for both endpoints; partial rows
+    combine with a single psum (rows are disjoint across owners).
+    """
+    K = max(graph.max_memberships, 1)
+    rows = graph.rows_per_shard
+
+    def kernel(memb_indptr, memb_indices, u, v):
+        # block-local shapes: memb_indptr (1, rows+1), memb_indices (1, nnz)
+        memb_indptr = memb_indptr[0]
+        memb_indices = memb_indices[0]
+        shard_id = jax.lax.axis_index(axis)
+        lo = shard_id * rows
+
+        def owned_rows(nodes):
+            local = nodes - lo
+            mine = (local >= 0) & (local < rows)
+            r = _local_rows(memb_indptr, memb_indices, local, mine, K)
+            # psum assembles full rows: non-owners contribute SENTINEL→0
+            contrib = jnp.where(r == SENTINEL, 0, r + 1)
+            full = jax.lax.psum(contrib, axis)
+            return jnp.where(full == 0, SENTINEL, full - 1)
+
+        a = owned_rows(u)  # (B, K) hyperedge ids, SENTINEL-padded
+        b = owned_rows(v)
+        eq = (a[:, :, None] == b[:, None, :]) & (a != SENTINEL)[:, :, None]
+        return jnp.sum(eq, axis=(1, 2)).astype(jnp.float32)
+
+    fn = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def edge_value(u, v):
+        return fn(
+            graph.memb_indptr, graph.memb_indices,
+            u.astype(jnp.int32), v.astype(jnp.int32),
+        )
+
+    return edge_value
+
+
+def make_sharded_walk_step(graph: ShardedTwoMode, mesh: Mesh, axis: str = "data"):
+    """Owner-routed pseudo-projected walk step over the sharded graph.
+
+    fn(u int32[B], key) -> int32[B]: the owner of each walker samples a
+    hyperedge from its local membership row; the member hop uses the
+    replicated directory; one psum routes results back.
+    """
+    rows = graph.rows_per_shard
+
+    def kernel(memb_indptr, memb_indices, h_indptr, h_indices, u, seed):
+        memb_indptr = memb_indptr[0]
+        memb_indices = memb_indices[0]
+        shard_id = jax.lax.axis_index(axis)
+        lo = shard_id * rows
+        local = u - lo
+        mine = (local >= 0) & (local < rows)
+        lc = jnp.clip(local, 0, rows - 1)
+        start = jnp.take(memb_indptr, lc)
+        length = jnp.take(memb_indptr, lc + 1) - start
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed[0])
+        key = jax.random.fold_in(key, shard_id)
+        k1, k2 = jax.random.split(key)
+        r1 = jax.random.randint(k1, u.shape, 0, jnp.maximum(length, 1))
+        he = jnp.take(memb_indices, start + r1, mode="clip")
+        # second hop through the replicated hyperedge directory
+        hs = jnp.take(h_indptr, jnp.clip(he, 0, h_indptr.shape[0] - 2))
+        hl = jnp.take(h_indptr, jnp.clip(he + 1, 0, h_indptr.shape[0] - 1)) - hs
+        r2 = jax.random.randint(k2, u.shape, 0, jnp.maximum(hl, 1))
+        nxt = jnp.take(h_indices, hs + r2, mode="clip")
+        ok = mine & (length > 0) & (hl > 0)
+        contrib = jnp.where(ok, nxt + 1, 0)
+        combined = jax.lax.psum(contrib, axis)
+        return jnp.where(combined == 0, u, combined - 1).astype(jnp.int32)
+
+    fn = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(), P(), P(), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def walk_step(u, seed):
+        return fn(
+            graph.memb_indptr, graph.memb_indices,
+            graph.members_indptr, graph.members_indices,
+            u.astype(jnp.int32), jnp.asarray([seed], jnp.int32),
+        )
+
+    return walk_step

@@ -1,0 +1,125 @@
+"""Multilayer random walks — the engine's throughput workload (paper §5).
+
+Threadle exists to drive sample/traversal analytics (random walkers,
+ego-nets, neighborhood sampling) over population graphs. The TPU-native
+formulation runs a *fleet* of walkers as one ``lax.scan``:
+
+* one-mode step: uniform CSR-row neighbor sample (O(1)).
+* two-mode step: sample a hyperedge from the node's memberships, then a
+  member of that hyperedge — an O(1) draw from the pseudo-projected
+  neighborhood with weight ∝ Σ_{shared h} 1/k_h (Newman 1/size weighting),
+  WITHOUT ever materializing the projection (DESIGN.md §4.3).
+* multilayer step: each walker samples a layer from a categorical
+  distribution, then steps within it (``lax.switch`` over layer step fns).
+
+Walk output feeds the LM data pipeline (repro.data.walk_corpus).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .network import Network
+
+__all__ = ["random_walk", "ego_sample", "neighborhood_sample"]
+
+
+def random_walk(
+    net: Network,
+    start_nodes: jnp.ndarray,
+    n_steps: int,
+    key: jax.Array,
+    layer_names: Sequence[str] | None = None,
+    layer_weights: Sequence[float] | None = None,
+) -> jnp.ndarray:
+    """Batched multilayer random walk -> int32[B, n_steps + 1].
+
+    Walkers with no valid move stay in place (dangling nodes).
+    """
+    layers = net._select(layer_names)
+    if layer_weights is None:
+        probs = jnp.full((len(layers),), 1.0 / len(layers))
+    else:
+        w = jnp.asarray(layer_weights, dtype=jnp.float32)
+        probs = w / jnp.sum(w)
+
+    step_fns = [
+        lambda u, k, layer=layer: layer.sample_neighbor(u, k)[0]
+        for layer in layers
+    ]
+
+    start = jnp.asarray(start_nodes, dtype=jnp.int32)
+
+    def one_step(carry, _):
+        u, k = carry
+        k, k_layer, k_step = jax.random.split(k, 3)
+        if len(layers) == 1:
+            v = step_fns[0](u, k_step)
+        else:
+            choice = jax.random.categorical(
+                k_layer, jnp.log(probs), shape=u.shape
+            )
+            # lax.switch needs a scalar branch index; walkers choose layers
+            # independently, so evaluate each layer's step and select.
+            # (len(layers) is small and static; per-walker switch would
+            # serialize the batch.)
+            keys = jax.random.split(k_step, len(layers))
+            candidates = jnp.stack(
+                [fn(u, kk) for fn, kk in zip(step_fns, keys)], axis=0
+            )
+            v = jnp.take_along_axis(candidates, choice[None, :], axis=0)[0]
+        return (v, k), v
+
+    (_, _), path = jax.lax.scan(one_step, (start, key), None, length=n_steps)
+    return jnp.concatenate([start[None], path], axis=0).T  # (B, n_steps+1)
+
+
+def ego_sample(
+    net: Network,
+    egos: jnp.ndarray,
+    max_alters: int,
+    layer_names: Sequence[str] | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ego-network extraction: padded alters across layers (mixed modes)."""
+    return net.node_alters(egos, max_alters, layer_names)
+
+
+def neighborhood_sample(
+    net: Network,
+    seeds: jnp.ndarray,
+    fanout: Sequence[int],
+    key: jax.Array,
+    layer_names: Sequence[str] | None = None,
+) -> list[jnp.ndarray]:
+    """GraphSAGE-style multi-hop neighbor sampling with per-hop fanout.
+
+    Returns a list of int32 arrays, hop i shaped (B, fanout[0]*...*fanout[i]).
+    Sampling uses the pseudo-projected O(1) step on two-mode layers.
+    """
+    layers = net._select(layer_names)
+    frontier = jnp.asarray(seeds, dtype=jnp.int32)
+    hops = []
+    for f in fanout:
+        key, k_layer, k_step = jax.random.split(key, 3)
+        flat = jnp.repeat(frontier, f, axis=-1)  # (B * prod(fanout so far))
+        if len(layers) == 1:
+            nxt = layers[0].sample_neighbor(flat, k_step)[0]
+        else:
+            choice = jax.random.categorical(
+                k_layer,
+                jnp.zeros((len(layers),)),
+                shape=flat.shape,
+            )
+            keys = jax.random.split(k_step, len(layers))
+            candidates = jnp.stack(
+                [l.sample_neighbor(flat, kk)[0] for l, kk in zip(layers, keys)],
+                axis=0,
+            )
+            nxt = jnp.take_along_axis(candidates, choice[None], axis=0)[0]
+        hops.append(nxt)
+        frontier = nxt
+    return hops

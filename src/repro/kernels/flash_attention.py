@@ -1,0 +1,136 @@
+"""Pallas kernel: blockwise (flash) causal attention forward.
+
+The LM stack's dominant FLOPs. Online-softmax formulation tiled for VMEM:
+
+  grid = (batch*heads, n_q_blocks, n_k_blocks)   (k dim sequential)
+  q tile: (block_q, d)  resident across the k sweep
+  k/v tiles: (block_k, d)
+  scratch (VMEM, persists across the k sweep):
+    m   (block_q, 1)  running row max
+    l   (block_q, 1)  running denominator
+    acc (block_q, d)  unnormalized output accumulator
+
+Causal masking is applied per (q-block, k-block) tile pair; whole tiles in
+the strict upper triangle are skipped arithmetically (masked to -inf) —
+Pallas grids are dense, so skipped tiles still load, but MXU work is the
+cost driver and the mask zeroes their contribution. Block shapes default to
+(128, 128): MXU-aligned for d ∈ {64, 128, 256}.
+
+GQA is handled in ops.py by an index-map that maps q-head -> kv-head
+(h // group), so K/V are never materially repeated.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int, n_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_q, block_k)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (block_q, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new)  # (block_q, block_k)
+    alpha = jnp.exp(m_prev - m_new)  # (block_q, 1)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "scale", "block_q", "block_k", "kv_group", "interpret"
+    ),
+)
+def flash_attention_kernel(
+    q: jnp.ndarray,  # (BH, S, D)   batch*q_heads folded
+    k: jnp.ndarray,  # (BHkv, S, D) batch*kv_heads folded
+    v: jnp.ndarray,  # (BHkv, S, D)
+    *,
+    scale: float,
+    causal: bool = True,
+    kv_group: int = 1,  # q_heads per kv head
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, S, D = q.shape
+    if S % block_q or S % block_k:
+        raise ValueError(f"seq {S} unaligned to blocks {block_q}/{block_k}")
+    n_q = S // block_q
+    n_k = S // block_k
+    grid = (BH, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec(
+                (1, block_k, D), lambda b, i, j, g=kv_group: (b // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, D), lambda b, i, j, g=kv_group: (b // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,189 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pads/aligns inputs to kernel block requirements, dispatches to the
+kernel (interpret=True on CPU — the validation mode; compiled on TPU), and
+slices the result back. ``use_pallas=False`` falls back to the jnp oracle,
+which is also what the distributed dry-run lowers (kernel bodies are a TPU
+runtime concern, not a sharding concern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import SENTINEL
+from . import ref
+from .intersect import intersect_count_kernel
+from .flash_attention import flash_attention_kernel
+from .rmsnorm import rmsnorm_kernel
+from .ssd_scan import ssd_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, fill) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+# intersect (pseudo-projection hot path)
+# ---------------------------------------------------------------------------
+
+
+def intersect_count(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Batched |row∩row| for SENTINEL-padded sorted rows -> int32[B]."""
+    if not use_pallas:
+        return ref.intersect_count_ref(a, b)
+    if interpret is None:
+        interpret = not _on_tpu()
+    B = a.shape[0]
+    a = _pad_to(_pad_to(a, 1, 128, SENTINEL), 0, 8, SENTINEL)
+    b = _pad_to(_pad_to(b, 1, 128, SENTINEL), 0, 8, SENTINEL)
+    out = intersect_count_kernel(a, b, interpret=interpret)
+    return out[:B]
+
+
+def pseudo_edge_value(
+    layer,
+    u: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-accelerated LayerTwoMode.edge_value (GetEdgeValue)."""
+    a, am = layer.memberships(u)
+    b, bm = layer.memberships(v)
+    a = jnp.where(am, a, SENTINEL)
+    b = jnp.where(bm, b, SENTINEL)
+    return intersect_count(
+        a, b, use_pallas=use_pallas, interpret=interpret
+    ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hq % Hkv:
+        raise ValueError(f"q heads {Hq} not a multiple of kv heads {Hkv}")
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(D))
+    qf = q.reshape(B * Hq, S, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+    if not use_pallas:
+        out = ref.attention_ref(qf, kf, vf, scale=scale, causal=causal,
+                                kv_group=group)
+        return out.reshape(B, Hq, S, D)
+    if interpret is None:
+        interpret = not _on_tpu()
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    out = flash_attention_kernel(
+        qf, kf, vf, scale=scale, causal=causal, kv_group=group,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out.reshape(B, Hq, S, D)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (B, H, S, P)
+    dt: jnp.ndarray,  # (B, H, S)
+    a_log: jnp.ndarray,  # (B, H, S)
+    bmat: jnp.ndarray,  # (B, S, N) shared single group
+    cmat: jnp.ndarray,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    B, H, S, P = x.shape
+    N = bmat.shape[-1]
+    xf = x.reshape(B * H, S, P)
+    dtf = dt.reshape(B * H, S)
+    af = a_log.reshape(B * H, S)
+    bf = jnp.repeat(bmat[:, None], H, axis=1).reshape(B * H, S, N)
+    cf = jnp.repeat(cmat[:, None], H, axis=1).reshape(B * H, S, N)
+    if not use_pallas:
+        if S % min(chunk, S) == 0:
+            out = ref.ssd_scan_chunked_ref(
+                xf, dtf, af, bf, cf, chunk=min(chunk, S)
+            )
+        else:
+            out = ref.ssd_scan_ref(xf, dtf, af, bf, cf)
+        return out.reshape(B, H, S, P)
+    if interpret is None:
+        interpret = not _on_tpu()
+    ck = min(chunk, S)
+    if S % ck:
+        raise ValueError(f"seq {S} not a multiple of chunk {ck}")
+    out = ssd_scan_kernel(xf, dtf, af, bf, cf, chunk=ck, interpret=interpret)
+    return out.reshape(B, H, S, P)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(
+    x: jnp.ndarray,  # (..., D)
+    w: jnp.ndarray,  # (D,)
+    *,
+    eps: float = 1e-6,
+    plus_one: bool = False,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, w, eps=eps, plus_one=plus_one)
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    R = x2.shape[0]
+    x2 = _pad_to(x2, 0, 8, 0)
+    out = rmsnorm_kernel(
+        x2, w, eps=eps, plus_one=plus_one, interpret=interpret
+    )
+    return out[:R].reshape(shape)

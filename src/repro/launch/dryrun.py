@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell, on BOTH production meshes
+(single-pod 16×16 and multi-pod 2×16×16):
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                           donate_argnums=...).lower(*input_specs(...))
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits per device
+        compiled.cost_analysis()     # per-device FLOPs/bytes for §Roofline
+
+plus collective wire-bytes parsed from the post-SPMD HLO. Artifacts land
+in artifacts/dryrun/<mesh>/<arch>__<shape>.json for benchmarks/roofline.
+
+NOTE: the two os.environ lines above run before ANY jax import (jax locks
+the device count on first init). Nothing else in the repo sets this flag.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_names, get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.launch.mesh import make_policy, make_production_mesh
+from repro.models.config import ModelConfig, active_param_count, param_count
+from repro.models.model import Model
+from repro.models.sharding import MeshPolicy, param_specs, use_policy
+from repro.perf.analytic import step_flops, step_hbm_bytes
+from repro.perf.hlo_analysis import analyze_collectives
+from repro.train.optimizer import AdamWConfig, make_optimizer
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+    "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# ring-algorithm wire-cost multipliers on the *result* bytes of each op
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,       # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    K = cfg.n_codebooks
+    Np = cfg.n_prefix_embeds
+    S_text = S - Np  # vlm: patch stub occupies part of the backbone seq
+
+    def tok(b, s):
+        shape = (b, s, K) if K else (b, s)
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    out = {}
+    if spec.kind == "train":
+        out["tokens"] = tok(B, S_text)
+        out["targets"] = tok(B, S_text)
+        out["loss_mask"] = jax.ShapeDtypeStruct((B, S_text), jnp.float32)
+        if Np:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, Np, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+    elif spec.kind == "prefill":
+        out["tokens"] = tok(B, S_text)
+        if Np:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, Np, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+    else:  # decode
+        out["tokens"] = tok(B, 1)
+        out["pos"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return out
+
+
+def _shapeof(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# step builders: (fn, arg_shapes, in_shardings, donate) per shape kind
+# ---------------------------------------------------------------------------
+
+
+def _batch_shardings(batch_specs: dict, policy: MeshPolicy):
+    def spec_for(name, leaf):
+        extra = (None,) * (len(leaf.shape) - 1)
+        return policy.sharding(policy.dp_spec, *extra, shape=leaf.shape)
+
+    return {k: spec_for(k, v) for k, v in batch_specs.items()}
+
+
+def _cache_shardings(cache_shapes, policy: MeshPolicy):
+    def leaf_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name in ("k", "v"):  # (…, B, S, Hkv, Dh)
+            entries = (None,) * (nd - 4) + policy.cache_entries()
+        elif name == "conv":  # (…, B, W-1, C)
+            entries = (None,) * (nd - 3) + (policy.dp_spec, None, policy.tp)
+        elif name == "ssm":  # (…, B, H, N, P)
+            entries = (None,) * (nd - 4) + (policy.dp_spec, policy.tp, None, None)
+        elif name == "h":  # (…, B, dr)
+            entries = (None,) * (nd - 2) + (policy.dp_spec, policy.tp)
+        else:
+            return NamedSharding(policy.mesh, P())
+        return policy.sharding(*entries, shape=leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def default_accum(cfg: ModelConfig, shape_name: str, policy: MeshPolicy) -> int:
+    """Gradient-accumulation factor keeping remat carry stacks ≲ 4 GiB/dev.
+
+    The scan-over-layers backward saves one (tokens/dev, d_model) carry per
+    layer (bf16 + an XLA fp32 echo ⇒ ~6 B/elem measured). Pick the
+    smallest power-of-two accum dividing the global batch that brings the
+    stack under budget — the standard production memory lever.
+    """
+    spec = SHAPES[shape_name]
+    if spec.kind != "train":
+        return 1
+    n_dp = 1
+    for a in policy.dp:
+        n_dp *= policy.mesh.shape[a]
+    tokens_dev = spec.global_batch * spec.seq_len // max(n_dp, 1)
+    stack_bytes = tokens_dev * cfg.d_model * 6 * cfg.n_layers
+    budget = 4 * 2**30
+    accum = 1
+    # cap: microbatch must stay >= n_dp sequences, else the batch dim
+    # under-shards and the remat carries REPLICATE across the idle dp
+    # ranks (measured: 56 GiB/dev on the multi-pod mesh)
+    max_accum = max(spec.global_batch // max(n_dp, 1), 1)
+    while (
+        stack_bytes / accum > budget
+        and accum * 2 <= max_accum
+        and spec.global_batch % (accum * 2) == 0
+    ):
+        accum *= 2
+    return accum
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, policy: MeshPolicy):
+    """Returns (step_fn, example_args, in_shardings, donate_argnums, meta)."""
+    spec = SHAPES[shape_name]
+    model = Model(cfg)
+    opt_cfg = AdamWConfig()
+    opt_init, opt_update = make_optimizer(cfg.optimizer, opt_cfg)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = jax.tree.map(
+        lambda s: NamedSharding(policy.mesh, s),
+        param_specs(params_shape, policy),
+    )
+    batch_specs = input_specs(cfg, shape_name)
+    b_shard = _batch_shardings(batch_specs, policy)
+    meta = {}
+
+    if spec.kind == "train":
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        o_shard = jax.tree.map(
+            lambda s: NamedSharding(policy.mesh, s),
+            param_specs(opt_shape, policy),
+        )
+        accum = default_accum(cfg, shape_name, policy)
+        meta["accum_steps"] = accum
+
+        def train_step(state, batch):
+            params = state["params"]
+            if accum > 1:
+                def micro(carry, mb):
+                    loss_acc, grad_acc = carry
+                    loss, grads = jax.value_and_grad(
+                        lambda p: model.loss(p, mb)[0]
+                    )(params)
+                    grad_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+                    )
+                    return (loss_acc + loss, grad_acc), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(
+                        (accum, x.shape[0] // accum) + x.shape[1:]
+                    ),
+                    batch,
+                )
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (loss_sum, grads), _ = jax.lax.scan(
+                    micro, (jnp.zeros((), jnp.float32), zero), mbs
+                )
+                loss = loss_sum / accum
+                grads = jax.tree.map(lambda g: g / accum, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch)[0]
+                )(params)
+            master, new_opt = opt_update(grads, state["opt"])
+            new_params = jax.tree.map(
+                lambda m, p: m.astype(p.dtype), master, params
+            )
+            return {"params": new_params, "opt": new_opt}, loss
+
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        args = (state_shape, batch_specs)
+        in_sh = ({"params": p_shard, "opt": o_shard}, b_shard)
+        out_sh = ({"params": p_shard, "opt": o_shard}, None)
+        return train_step, args, in_sh, out_sh, (0,), meta
+
+    if spec.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = model.prefill(
+                params, batch["tokens"], spec.seq_len,
+                batch.get("prefix_embeds"),
+            )
+            return logits, caches
+
+        out_cache_shape = jax.eval_shape(
+            lambda: Model(cfg).init_cache(spec.global_batch, spec.seq_len)
+        )
+        out_sh = (None, _cache_shardings(out_cache_shape, policy))
+        args = (params_shape, batch_specs)
+        return prefill_step, args, (p_shard, b_shard), out_sh, (), meta
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(spec.global_batch, spec.seq_len)
+    )
+    c_shard = _cache_shardings(cache_shape, policy)
+
+    def decode_step(params, caches, batch):
+        logits, new_caches = model.decode_step(
+            params, batch["tokens"], caches, batch["pos"]
+        )
+        return logits, new_caches
+
+    args = (params_shape, cache_shape, batch_specs)
+    out_sh = (None, c_shard)  # stable cache layout -> in-place donation
+    return decode_step, args, (p_shard, c_shard, b_shard), out_sh, (1,), meta
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"((?:\([^)]*\))|(?:\S+))\s+"  # result type: tuple or single
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective type (result-size × ring factor)."""
+    by_type: dict = defaultdict(lambda: {"count": 0, "result_bytes": 0})
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        b = _type_bytes(type_str)
+        by_type[op]["count"] += 1
+        by_type[op]["result_bytes"] += b
+    total_wire = sum(
+        v["result_bytes"] * _WIRE_FACTOR[k] for k, v in by_type.items()
+    )
+    return {"by_type": dict(by_type), "wire_bytes_per_device": total_wire}
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_name: str,
+    save_hlo: bool = False, art_dir: Path = ART_DIR,
+) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    policy = make_policy(mesh, cfg)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips,
+        "params_total": param_count(cfg),
+        "params_active": active_param_count(cfg),
+        "optimizer": cfg.optimizer,
+        "seq_len": SHAPES[shape_name].seq_len,
+        "global_batch": SHAPES[shape_name].global_batch,
+        "kind": SHAPES[shape_name].kind,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        with use_policy(policy):
+            step_fn, args, in_sh, out_sh, donate, meta = build_cell(
+                cfg, shape_name, policy
+            )
+            record.update(meta)
+            with mesh:
+                jitted = jax.jit(
+                    step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=donate,
+                )
+                lowered = jitted.lower(*args)
+                record["lower_s"] = time.time() - t0
+                t1 = time.time()
+                compiled = lowered.compile()
+                record["compile_s"] = time.time() - t1
+
+                ma = compiled.memory_analysis()
+                record["memory_analysis"] = {
+                    "argument_bytes": int(ma.argument_size_in_bytes),
+                    "output_bytes": int(ma.output_size_in_bytes),
+                    "temp_bytes": int(ma.temp_size_in_bytes),
+                    "alias_bytes": int(ma.alias_size_in_bytes),
+                    "peak_bytes_estimate": int(
+                        ma.argument_size_in_bytes
+                        + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes
+                        - ma.alias_size_in_bytes
+                    ),
+                }
+                ca = compiled.cost_analysis()
+                record["cost_analysis"] = {
+                    # NOTE: XLA counts while bodies once (loops NOT trip-
+                    # multiplied) — see perf/analytic.py; these are floors.
+                    "flops_per_device": float(ca.get("flops", 0.0)),
+                    "bytes_accessed_per_device": float(
+                        ca.get("bytes accessed", 0.0)
+                    ),
+                    "transcendentals": float(ca.get("transcendentals", 0.0)),
+                }
+                record["analytic"] = {
+                    "flops": step_flops(cfg, shape_name),
+                    "hbm_bytes_per_device": step_hbm_bytes(
+                        cfg, shape_name, n_chips,
+                        accum=record.get("accum_steps", 1),
+                    ),
+                }
+                hlo = compiled.as_text()
+                record["hlo_chars"] = len(hlo)
+                # loop-amplified exact wire bytes (perf/hlo_analysis.py)
+                record["collectives"] = analyze_collectives(hlo)
+                record["collectives_unamplified"] = parse_collectives(hlo)
+                if save_hlo:
+                    import gzip
+
+                    hdir = art_dir / mesh_name
+                    hdir.mkdir(parents=True, exist_ok=True)
+                    with gzip.open(
+                        hdir / f"{arch}__{shape_name}.hlo.txt.gz", "wt"
+                    ) as f:
+                        f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+
+    out = art_dir / mesh_name
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}__{shape_name}.json").write_text(
+        json.dumps(record, indent=1)
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(all_arch_names())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_err = n_skip = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                if not cell_applicable(arch, shape):
+                    print(f"SKIP  {mesh_name:6s} {arch:28s} {shape:12s} "
+                          "(full attention at 500k — DESIGN.md §5)")
+                    n_skip += 1
+                    continue
+                art = ART_DIR / mesh_name / f"{arch}__{shape}.json"
+                if args.skip_existing and art.exists():
+                    rec = json.loads(art.read_text())
+                    if rec.get("status") == "ok":
+                        n_ok += 1
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_name, save_hlo=args.save_hlo)
+                dt = time.time() - t0
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    mm = rec["memory_analysis"]["peak_bytes_estimate"] / 2**30
+                    fl = rec["cost_analysis"]["flops_per_device"]
+                    cw = rec["collectives"]["wire_bytes_per_device"] / 2**20
+                    print(f"OK    {mesh_name:6s} {arch:28s} {shape:12s} "
+                          f"{dt:6.1f}s  {mm:7.2f} GiB/dev  "
+                          f"{fl:.3e} FLOP/dev  {cw:9.1f} MiB wire")
+                else:
+                    n_err += 1
+                    print(f"ERROR {mesh_name:6s} {arch:28s} {shape:12s} "
+                          f"{rec['error']}")
+    print(f"\ndone: {n_ok} ok, {n_err} errors, {n_skip} skipped (by design)")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

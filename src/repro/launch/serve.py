@@ -1,0 +1,81 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Loads a checkpoint (or random-inits a reduced config), then serves a
+batch of demo prompts through the batched prefill+decode engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+from repro.train.checkpoint import latest_checkpoint, restore_checkpoint
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--n-requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(
+        n_layers=max(len(get_config(args.arch).block_pattern) * 2, 4),
+        d_model=256, d_ff=512, vocab_size=4096,
+        n_kv_heads=2, n_heads=4, head_dim=64,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        latest = latest_checkpoint(args.ckpt_dir)
+        if latest is None:
+            raise SystemExit(f"no committed checkpoint under {args.ckpt_dir}")
+        state_tpl = {"params": params}
+        try:
+            state, step, _ = restore_checkpoint(latest, state_tpl)
+            params = state["params"]
+            print(f"restored params from step {step}")
+        except (KeyError, ValueError):
+            # checkpoint includes opt state; restore the full layout
+            from repro.train.optimizer import AdamWConfig, init_opt_state
+
+            state_tpl = {
+                "params": params,
+                "opt": init_opt_state(params, AdamWConfig()),
+            }
+            state, step, _ = restore_checkpoint(latest, state_tpl)
+            params = state["params"]
+            print(f"restored params (+opt) from step {step}")
+
+    rng = np.random.default_rng(args.seed)
+    shape = (
+        (args.prompt_len, cfg.n_codebooks) if cfg.n_codebooks
+        else (args.prompt_len,)
+    )
+    reqs = [
+        Request(
+            prompt=rng.integers(2, cfg.vocab_size, size=shape),
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature,
+            rid=i,
+        )
+        for i in range(args.n_requests)
+    ]
+    eng = ServeEngine(model, params, max_seq=args.max_seq, seed=args.seed)
+    outs = eng.generate(reqs)
+    for o in outs:
+        print(f"request {o.rid}: {o.tokens.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,714 @@
+"""Composable decoder building blocks (all assigned families).
+
+Pure functions over explicit param pytrees: ``init_*`` builds params,
+``apply_*`` runs them. Activation sharding is constrained through the
+active MeshPolicy (no-op on single device). Numerics: params/activations
+in cfg.dtype (bf16 at scale), reductions (norm, softmax, router, scan
+states) in fp32.
+
+Attention is *blocked* (scan over query chunks, online mask) so 32k-token
+prefill never materializes an S×S score matrix — the XLA analogue of flash
+attention; the Pallas kernel (kernels/flash_attention.py) is the TPU
+fast path behind the same interface.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .config import ModelConfig
+from .sharding import active_policy
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+@jax.custom_vjp
+def grad_cast(x):
+    """Identity whose COTANGENT is cast to the primal dtype.
+
+    Attention/norm chains upcast to fp32 internally, and their fp32
+    cotangents join the residual stream, turning every dx all-reduce and
+    saved-stack consumer fp32 (2× wire + the XLA convert-hoist echo on the
+    remat carry stack). Applied at residual joins this pins backward
+    traffic to bf16 (§Perf iteration A)."""
+    return x
+
+
+def _grad_cast_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _grad_cast_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def _normal(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm + RoPE
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_rmsnorm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    # stored zero-centered; effective scale = w + 1 (always), which covers
+    # both gemma-style (1+w) and plain w (init w=1 -> stored 0)
+    return kops.rmsnorm(
+        x, p["w"], eps=cfg.rmsnorm_eps, plus_one=True,
+        use_pallas=cfg.use_pallas,
+    ).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional qk-norm + optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    std = 0.02
+    p = {
+        "ln": init_rmsnorm(d),
+        "wq": _normal(ks[0], (d, h, dh), std, dt),
+        "wk": _normal(ks[1], (d, hkv, dh), std, dt),
+        "wv": _normal(ks[2], (d, hkv, dh), std, dt),
+        "wo": _normal(ks[3], (h, dh, d), std / math.sqrt(2 * cfg.n_layers), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions):
+    pol = active_policy()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k, v = pol.act_bshd(q), pol.act_bshd(k), pol.act_bshd(v)
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q, cfg)
+        k = apply_rmsnorm(p["k_norm"], k, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # pin dq/dk/dv to bf16: rope/score upcasts make them f32 otherwise,
+    # doubling the dx all-reduce wire through the projection backward
+    return grad_cast(q), grad_cast(k), grad_cast(v)
+
+
+def _expand_kv(k, H):
+    """(B,S,Hkv,Dh) -> (B,S,H,Dh): repeat kv per q-head.
+
+    GQA's grouped (Hkv, G) score layout defeats head-sharding whenever
+    Hkv < tp (e.g. kv=8 on a 16-way axis) — the scores become replicated
+    per device (measured: 17 GiB/dev at train_4k). Expanding kv to the q
+    head count keeps a single shardable head axis; the repeat itself is
+    sharded away (per-device kv bytes are unchanged). The Pallas flash
+    kernel does NOT need this — its kv index_map folds the group.
+    """
+    G = H // k.shape[2]
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def attention_blocked(
+    q, k, v, cfg: ModelConfig, *, chunk: int = 1024,
+) -> jnp.ndarray:
+    """Causal (optionally windowed) attention via scan over query chunks.
+
+    q (B,S,H,Dh), k/v (B,S,Hkv,Dh) -> (B,S,H,Dh). Never materializes
+    (S, S); per-step memory is O(chunk * S) [or O(chunk * (window+chunk))
+    for sliding-window layers]. The chunk step is rematerialized in the
+    backward pass (flash-style), so no (chunk, S) score tensor is saved.
+    """
+    pol = active_policy()
+    B, S, H, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not divisible by q-chunk {chunk}"
+    nq = S // chunk
+    win = cfg.attn_window
+    softcap = cfg.attn_logit_softcap
+
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    qq = q.reshape(B, nq, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    use_window = win is not None and win + chunk <= S
+    kspan = (win + chunk) if use_window else S
+
+    def step(_, inp):
+        qi, qc = inp  # qc (B, chunk, H, Dh)
+        q_pos = qi * chunk + jnp.arange(chunk)
+        if use_window:
+            start = jnp.clip(qi * chunk - win, 0, S - kspan)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, kspan, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, kspan, axis=1)
+            k_pos = start + jnp.arange(kspan)
+        else:
+            kc, vc = k, v
+            k_pos = jnp.arange(S)
+        s = jnp.einsum(
+            "bchd,bshd->bhcs",
+            qc.astype(jnp.float32), kc.astype(jnp.float32),
+        ) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = pol.constrain(s, pol.dp_spec, pol.tp, None, None)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if win is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - win
+        s = jnp.where(mask[None, None], s, -1e30)
+        pmax = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - pmax)
+        o = jnp.einsum("bhcs,bshd->bchd", e, vc.astype(jnp.float32))
+        o = o / jnp.sum(e, axis=-1).transpose(0, 2, 1)[..., None]
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(step), None, (jnp.arange(nq), qq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+    return out
+
+
+def attention_decode(
+    q, k_cache, v_cache, pos, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Single-token attention against a cache.
+
+    q (B,1,H,Dh); caches (B,S,Hkv,Dh); pos (B,) current lengths.
+
+    Uses the GROUPED GQA einsum (no kv expansion): expanding the cache to
+    q-heads forces GSPMD to fully re-materialize a seq-sharded cache
+    (measured: +18 GiB/dev at decode_32k). Grouped scores keep the cache's
+    own sharding — S-sharded caches give flash-decoding-style partial
+    attention with XLA-inserted combines.
+    """
+    pol = active_policy()
+    B, _, H, Dh = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32) * scale,
+        k_cache.astype(jnp.float32),
+    )  # (B,Hkv,G,S)
+    if cfg.attn_logit_softcap:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    # ring-aware absolute position of each cache slot: slot j last written
+    # at abs = pos - ((pos - j) mod S); slots never written come out < 0
+    j = jnp.arange(S)
+    abs_j = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], S)
+    mask = (abs_j >= 0) & (abs_j <= pos[:, None])
+    if cfg.attn_window is not None:
+        mask &= abs_j > (pos[:, None] - cfg.attn_window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def apply_attention(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig,
+    positions, cache=None,
+):
+    """Returns (out, new_cache). cache None -> train (no cache kept);
+    cache dict with {'k','v'} and pos -> decode/prefill semantics."""
+    pol = active_policy()
+    h = apply_rmsnorm(p["ln"], x, cfg)
+    q, k, v = _qkv(p, h, cfg, positions)
+    if cache is None:
+        o = _maybe_flash(q, k, v, cfg)
+        new_cache = None
+    elif q.shape[1] > 1:  # prefill: run blocked attn, fill cache
+        o = _maybe_flash(q, k, v, cfg)
+        S_cache = cache["k"].shape[1]
+        if q.shape[1] > S_cache and q.shape[1] % S_cache:
+            # ring invariant: slot j must hold abs ≡ j (mod S_cache)
+            raise ValueError(
+                f"windowed prefill length {q.shape[1]} must be a multiple "
+                f"of the cache window {S_cache}"
+            )
+        kpad = _fit_seq(k, S_cache)
+        vpad = _fit_seq(v, S_cache)
+        new_cache = {"k": pol.cache(kpad), "v": pol.cache(vpad)}
+    else:  # decode step (ring write for windowed caches; identity otherwise)
+        pos = positions if positions.ndim == 1 else positions[:, 0]
+        S_cache = cache["k"].shape[1]
+        write_at = jnp.mod(_scalar(pos), S_cache)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), write_at, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), write_at, axis=1
+        )
+        kc, vc = pol.cache(kc), pol.cache(vc)
+        o = attention_decode(q, kc, vc, pos, cfg)
+        new_cache = {"k": kc, "v": vc}
+    # row-parallel contraction: force bf16 partial sums so the TP
+    # all-reduce moves bf16, not the f32 accumulation dtype (§Perf A')
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=x.dtype)
+    return pol.act_bsd(out), new_cache
+
+
+def _maybe_flash(q, k, v, cfg: ModelConfig):
+    S = q.shape[1]
+    if (
+        cfg.use_pallas
+        and cfg.attn_window is None
+        and cfg.attn_logit_softcap is None
+        and S % 128 == 0
+    ):
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+        )
+        return o.transpose(0, 2, 1, 3)
+    return attention_blocked(q, k, v, cfg)
+
+
+def _fit_seq(x, S_cache):
+    S = x.shape[1]
+    if S == S_cache:
+        return x
+    if S < S_cache:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (0, S_cache - S)
+        return jnp.pad(x, pad)
+    return x[:, -S_cache:]
+
+
+def _scalar(pos):
+    # decode uses a common position for the batch (continuous batching
+    # handles ragged positions at the serving layer)
+    return pos[0] if pos.ndim else pos
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    S = max_seq if cfg.attn_window is None else min(cfg.attn_window, max_seq)
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {
+        "ln": init_rmsnorm(d),
+        "w_gate": _normal(ks[0], (d, f), 0.02, dt),
+        "w_up": _normal(ks[1], (d, f), 0.02, dt),
+        "w_down": _normal(ks[2], (f, d), 0.02 / math.sqrt(2 * cfg.n_layers), dt),
+    }
+
+
+def _act(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    pol = active_policy()
+    h = apply_rmsnorm(p["ln"], x, cfg)
+    g = pol.act_bsf(jnp.einsum("bsd,df->bsf", h, p["w_gate"]))
+    u = pol.act_bsf(jnp.einsum("bsd,df->bsf", h, p["w_up"]))
+    z = _act(cfg.mlp_act)(g) * u
+    return pol.act_bsd(
+        jnp.einsum("bsf,fd->bsd", z, p["w_down"],
+                   preferred_element_type=x.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based top-k dispatch; EP over the tp axis)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    dt = _dtype(cfg)
+    down_std = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "ln": init_rmsnorm(d),
+        "router": _normal(ks[0], (d, e), 0.02, jnp.float32),
+        "experts_gate": _normal(ks[1], (e, d, f), 0.02, dt),
+        "experts_up": _normal(ks[2], (e, d, f), 0.02, dt),
+        "experts_down": _normal(ks[3], (e, f, d), down_std, dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared_gate"] = _normal(ks[4], (d, f), 0.02, dt)
+        p["shared_up"] = _normal(ks[5], (d, f), 0.02, dt)
+        p["shared_down"] = _normal(ks[6], (f, d), down_std, dt)
+    return p
+
+
+MOE_CHUNK_TOKENS = 16_384  # dispatch chunk: bounds (E, C, D) buffers
+# (§Perf: 65k -> 16k cut scout train_4k peak 21.3 -> 18.6 GiB/dev; 8k only
+# bought 0.4 GiB more — diminishing, and smaller chunks serialize dispatch)
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """Returns (out, aux_losses). Dispatch is CHUNKED over the sequence so
+    the (E, capacity, D) buffers stay bounded at 32k-token prefill — the
+    engine's no-materialization principle applied to the token→expert
+    bipartite routing (DESIGN.md §5)."""
+    B, S, D = x.shape
+    tokens_per_step = B * S
+    if tokens_per_step <= MOE_CHUNK_TOKENS or S == 1:
+        return _moe_dispatch(p, x, cfg)
+    # scan over sequence chunks; each chunk routes independently (same
+    # semantics as chunked prefill in serving frameworks)
+    n_chunks = max(1, -(-tokens_per_step // MOE_CHUNK_TOKENS))
+    while S % n_chunks:
+        n_chunks += 1
+    xc = jnp.moveaxis(
+        x.reshape(B, n_chunks, S // n_chunks, D), 1, 0
+    )  # (n_chunks, B, s_chunk, D)
+
+    def step(_, xb):
+        out, aux = _moe_dispatch(p, xb, cfg)
+        return None, (out, aux["moe_load_balance"], aux["moe_z_loss"])
+
+    _, (outs, lbs, zs) = jax.lax.scan(step, None, xc)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D)
+    return out, {
+        "moe_load_balance": jnp.mean(lbs),
+        "moe_z_loss": jnp.mean(zs),
+    }
+
+
+def _moe_dispatch(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    pol = active_policy()
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    K = cfg.n_experts_per_token
+    C = max(int(cfg.moe_capacity_factor * T * K / E), 1)
+    C = min(C, T)
+
+    h = apply_rmsnorm(p["ln"], x, cfg).reshape(T, D)
+    logits = jnp.einsum(
+        "td,de->te", h.astype(jnp.float32), p["router"]
+    )  # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    out = jnp.zeros((T, D), jnp.float32)
+    masked = probs
+    f_frac = jnp.zeros((E,), jnp.float32)
+    for _ in range(K):
+        eidx = jnp.argmax(masked, axis=-1)  # (T,)
+        gate = jnp.take_along_axis(masked, eidx[:, None], axis=-1)[:, 0]
+        onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1  # (T, E)
+        pos_t = jnp.take_along_axis(pos, eidx[:, None], axis=-1)[:, 0]
+        keep = pos_t < C
+        slot = jnp.where(keep, pos_t, C)  # OOB -> dropped
+        buf = jnp.zeros((E, C + 1, D), h.dtype).at[eidx, slot].set(h)
+        buf = pol.act_ecd(buf[:, :C])
+        # expert FFN on (E, C, D)
+        g = _act(cfg.mlp_act)(
+            jnp.einsum("ecd,edf->ecf", buf, p["experts_gate"])
+        )
+        u = jnp.einsum("ecd,edf->ecf", buf, p["experts_up"])
+        eo = jnp.einsum("ecf,efd->ecd", g * u, p["experts_down"],
+                        preferred_element_type=x.dtype)
+        eo = pol.act_ecd(eo)
+        eo = jnp.pad(eo, ((0, 0), (0, 1), (0, 0)))  # slot C reads zeros
+        out = out + (
+            eo[eidx, slot].astype(jnp.float32)
+            * (gate * keep)[:, None]
+        )
+        f_frac = f_frac + jnp.mean(onehot.astype(jnp.float32), axis=0)
+        masked = masked * (1.0 - onehot)  # exclude chosen expert for next k
+
+    # aux: load-balance (Switch) + router z-loss
+    p_frac = jnp.mean(probs, axis=0)
+    aux = {
+        "moe_load_balance": E * jnp.sum(f_frac / K * p_frac),
+        "moe_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    routed = out.reshape(B, S, D).astype(x.dtype)
+    if cfg.moe_shared_expert:
+        hs = h.reshape(B, S, D)
+        g = _act(cfg.mlp_act)(jnp.einsum("bsd,df->bsf", hs, p["shared_gate"]))
+        u = jnp.einsum("bsd,df->bsf", hs, p["shared_up"])
+        routed = routed + jnp.einsum(
+            "bsf,fd->bsd", g * u, p["shared_down"],
+            preferred_element_type=x.dtype,
+        )
+    return pol.act_bsd(routed), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, n, hs, w = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    conv_ch = di + 2 * n
+    return {
+        "ln": init_rmsnorm(d),
+        # order: [z (di), x (di), B (n), C (n), dt (hs)]
+        "in_proj": _normal(ks[0], (d, 2 * di + 2 * n + hs), 0.02, dt),
+        "conv_w": _normal(ks[1], (w, conv_ch), 0.02, jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.zeros((hs,), jnp.float32),
+        "a_log_p": jnp.log(
+            jnp.linspace(1.0, 16.0, hs, dtype=jnp.float32)
+        ),  # A in [-16, -1]
+        "d_skip": jnp.ones((hs,), jnp.float32),
+        "gate_ln": init_rmsnorm(di),
+        "out_proj": _normal(
+            ks[2], (di, d), 0.02 / math.sqrt(2 * cfg.n_layers), dt
+        ),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,C), w (W,C). state (B,W-1,C) or None.
+    Returns (y (B,S,C), new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(W)
+    )
+    new_state = xp[:, -(W - 1) :] if W > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def apply_mamba(p: Params, x: jnp.ndarray, cfg: ModelConfig, cache=None):
+    """Returns (out, new_cache). cache = {'conv': (B,W-1,C), 'ssm': (B,H,N,P)}."""
+    pol = active_policy()
+    B, S, D = x.shape
+    di, n, hs = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_ = cfg.ssm_head_dim
+
+    h = apply_rmsnorm(p["ln"], x, cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di : 2 * di]
+    bmat = zxbcdt[..., 2 * di : 2 * di + n]
+    cmat = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n :]  # (B,S,hs)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1).astype(jnp.float32)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out).astype(h.dtype)
+    xin = conv_out[..., :di]
+    bmat = conv_out[..., di : di + n]
+    cmat = conv_out[..., di + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,hs)
+    a = -jnp.exp(p["a_log_p"])  # (hs,)
+    a_log = dt * a[None, None, :]  # (B,S,hs) log-decay
+
+    xh = xin.reshape(B, S, hs, P_).transpose(0, 2, 1, 3)  # (B,hs,S,P)
+    if cache is None or S > 1:
+        y = kops.ssd_scan(
+            xh.astype(_dtype(cfg)),
+            dt.transpose(0, 2, 1),
+            a_log.transpose(0, 2, 1),
+            bmat.astype(_dtype(cfg)),
+            cmat.astype(_dtype(cfg)),
+            chunk=min(cfg.ssm_chunk, S),
+            use_pallas=cfg.use_pallas and S % cfg.ssm_chunk == 0,
+        )  # (B,hs,S,P)
+        new_ssm = None
+        if cache is not None:  # prefill: rebuild final state for decode
+            new_ssm = _ssd_final_state(xh, dt, a_log, bmat)
+    else:  # single-step decode
+        s_prev = cache["ssm"]  # (B,hs,N,P)
+        dt1 = dt[:, 0]  # (B,hs)
+        a1 = jnp.exp(a_log[:, 0])  # (B,hs)
+        bt = (bmat[:, 0])[:, None, :] * dt1[..., None]  # (B,hs,N)
+        s_new = (
+            a1[..., None, None] * s_prev
+            + bt[..., :, None] * xh[:, :, 0][:, :, None, :].astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], s_new)[:, :, None, :]
+        y = y.transpose(0, 2, 1, 3).reshape(B, 1, hs, P_).transpose(0, 2, 1, 3)
+        y = y.astype(x.dtype)
+        new_ssm = s_new
+
+    y = y.transpose(0, 2, 1, 3).astype(x.dtype)  # (B,S,hs,P)
+    y = y + (
+        p["d_skip"].astype(x.dtype)[None, None, :, None]
+        * xh.transpose(0, 2, 1, 3).astype(x.dtype)
+    )
+    y = y.reshape(B, S, di)
+    gate = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = apply_rmsnorm(p["gate_ln"], y * gate, cfg)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=x.dtype).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return pol.act_bsd(out), new_cache
+
+
+def _ssd_final_state(xh, dt, a_log, bmat):
+    """Final SSM state after a prefill (for decode continuation).
+    xh (B,hs,S,P), dt/a_log (B,S,hs), bmat (B,S,N) -> (B,hs,N,P)."""
+    B, hs, S, P_ = xh.shape
+    lc = jnp.cumsum(a_log, axis=1)  # (B,S,hs)
+    decay_to_end = jnp.exp(lc[:, -1:, :] - lc)  # (B,S,hs)
+    bt = bmat[:, :, None, :] * dt[..., None]  # (B,S,hs,N)
+    contrib = jnp.einsum(
+        "bshn,bhsp,bsh->bhnp",
+        bt.astype(jnp.float32),
+        xh.astype(jnp.float32),
+        decay_to_end,
+    )
+    return contrib
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin) block
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> Params:
+    d, dr, w = cfg.d_model, cfg.rnn_dim, cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    return {
+        "ln": init_rmsnorm(d),
+        "w_in": _normal(ks[0], (d, dr), 0.02, dt),
+        "w_gate_branch": _normal(ks[1], (d, dr), 0.02, dt),
+        "conv_w": _normal(ks[2], (w, dr), 0.02, jnp.float32),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": _normal(ks[3], (dr, dr), 0.02, jnp.float32),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": _normal(ks[4], (dr, dr), 0.02, jnp.float32),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        # Λ init so a^c ≈ 0.9..0.999 (long memory)
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.3, 1.5, dr))).astype(jnp.float32),
+        "w_rnn_out": _normal(
+            ks[5], (dr, d), 0.02 / math.sqrt(2 * cfg.n_layers), dt
+        ),
+    }
+
+
+def apply_rglru(p: Params, x: jnp.ndarray, cfg: ModelConfig, cache=None):
+    """Griffin recurrent block. cache = {'conv': (B,W-1,dr), 'h': (B,dr)}."""
+    pol = active_policy()
+    B, S, D = x.shape
+    hin = apply_rmsnorm(p["ln"], x, cfg)
+    u = pol.act_bsf(jnp.einsum("bsd,dr->bsr", hin, p["w_in"]))
+    gate = jax.nn.gelu(
+        pol.act_bsf(jnp.einsum("bsd,dr->bsr", hin, p["w_gate_branch"]))
+    )
+    conv_state = None if cache is None else cache["conv"]
+    uc, new_conv = _causal_conv(
+        u.astype(jnp.float32), p["conv_w"], p["conv_b"], conv_state
+    )
+    r = jax.nn.sigmoid(uc @ p["w_a"] + p["b_a"])  # (B,S,dr) fp32
+    i = jax.nn.sigmoid(uc @ p["w_x"] + p["b_x"])
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (i * uc)
+
+    if cache is None or S > 1:
+        def combine(left, right):
+            al, bl = left
+            ar, br = right
+            return al * ar, bl * ar + br
+
+        h0 = jnp.zeros((B, 1, a.shape[-1]), jnp.float32)
+        if cache is not None:
+            h0 = cache["h"][:, None, :]
+        # seed the scan with the carried state as step 0
+        a_all = jnp.concatenate([jnp.ones_like(h0), a], axis=1)
+        b_all = jnp.concatenate([h0, b], axis=1)
+        _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+        h = hs[:, 1:]
+        new_h = hs[:, -1]
+    else:
+        h_prev = cache["h"]
+        h = a[:, 0] * h_prev + b[:, 0]
+        new_h = h
+        h = h[:, None, :]
+
+    y = (h.astype(x.dtype)) * gate
+    out = jnp.einsum("bsr,rd->bsd", y, p["w_rnn_out"],
+                     preferred_element_type=x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": new_h}
+    return pol.act_bsd(out), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros(
+            (batch, cfg.ssm_conv_width - 1, cfg.rnn_dim), jnp.float32
+        ),
+        "h": jnp.zeros((batch, cfg.rnn_dim), jnp.float32),
+    }

@@ -1,0 +1,379 @@
+"""The composable decoder Model: scan-over-layers, train/prefill/decode.
+
+Layer stacking: the repeating ``block_pattern`` unit is one scan step
+("group"); params for each pattern slot are stacked over groups, so HLO
+size is O(pattern) not O(n_layers) — essential for 62-layer compile times.
+Patterns that don't divide n_layers get an unscanned tail (e.g.
+recurrentgemma's 38 = 12×(R,R,A) + (R,R)).
+
+Modality frontends are stubs per assignment: VLM takes precomputed patch
+embeddings (`prefix_embeds`), audio takes multi-codebook token streams.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    apply_attention,
+    apply_mamba,
+    apply_mlp,
+    apply_moe,
+    apply_rglru,
+    apply_rmsnorm,
+    grad_cast,
+    init_attention,
+    init_attn_cache,
+    init_mamba,
+    init_mamba_cache,
+    init_mlp,
+    init_moe,
+    init_rglru,
+    init_rglru_cache,
+    init_rmsnorm,
+    _normal,
+    _dtype,
+)
+from .sharding import active_policy
+
+Params = dict[str, Any]
+
+_MIX_INIT = {"attn": init_attention, "mamba": init_mamba, "rglru": init_rglru}
+_MIX_APPLY = {"attn": apply_attention, "mamba": apply_mamba, "rglru": apply_rglru}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def _init_layer(self, key, kind: str, slot_idx: int) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p: Params = {"mix": _MIX_INIT[kind](k1, cfg)}
+        ffn = cfg.ffn_kind_at(slot_idx)
+        if ffn == "mlp" and kind != "mamba":
+            p["ffn"] = init_mlp(k2, cfg)
+        elif ffn == "moe":
+            p["ffn"] = init_moe(k2, cfg)
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, kh, kg, kt = jax.random.split(key, 4)
+        dt = _dtype(cfg)
+        V, D = cfg.vocab_size, cfg.d_model
+        params: Params = {"final_ln": init_rmsnorm(D)}
+        if cfg.n_codebooks:
+            params["embed"] = _normal(ke, (cfg.n_codebooks, V, D), 0.02, dt)
+            if not cfg.tie_embeddings:
+                params["head"] = _normal(kh, (cfg.n_codebooks, D, V), 0.02, dt)
+        else:
+            params["embed"] = _normal(ke, (V, D), 0.02, dt)
+            if not cfg.tie_embeddings:
+                params["head"] = _normal(kh, (D, V), 0.02, dt)
+
+        # scanned groups: one stacked param set per pattern slot
+        G = cfg.n_groups
+        gkeys = jax.random.split(kg, G)
+
+        def init_group(k):
+            ks = jax.random.split(k, len(cfg.block_pattern))
+            return {
+                f"slot{i}": self._init_layer(ks[i], kind, i)
+                for i, kind in enumerate(cfg.block_pattern)
+            }
+
+        params["groups"] = jax.vmap(init_group)(gkeys)
+        if cfg.tail_pattern:
+            tkeys = jax.random.split(kt, len(cfg.tail_pattern))
+            params["tail"] = {
+                f"tail{i}": self._init_layer(tkeys[i], kind, i)
+                for i, kind in enumerate(cfg.tail_pattern)
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    # forward machinery
+    # ------------------------------------------------------------------
+
+    def _embed(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            # tokens (B, S, K); params['embed'] (K, V, D): summed codebooks
+            x = sum(
+                jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                for k in range(cfg.n_codebooks)
+            )
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)  # (B,S,D)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(
+                jnp.sqrt(jnp.float32(cfg.d_model)), x.dtype
+            )
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        return active_policy().act_bsd(x)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_rmsnorm(params["final_ln"], x, cfg)
+        if cfg.n_codebooks:
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,kvd->bskv", x, params["embed"])
+            else:
+                logits = jnp.einsum("bsd,kdv->bskv", x, params["head"])
+        else:
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+            else:
+                logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        return active_policy().act_logits(logits)
+
+    def _layer_fwd(self, layer_params, kind, x, positions, cache):
+        cfg = self.cfg
+        aux = {}
+        if kind == "attn":
+            mix_out, new_cache = apply_attention(
+                layer_params["mix"], x, cfg, positions, cache
+            )
+        elif kind == "mamba":
+            mix_out, new_cache = apply_mamba(layer_params["mix"], x, cfg, cache)
+        else:
+            mix_out, new_cache = apply_rglru(layer_params["mix"], x, cfg, cache)
+        x = x + grad_cast(mix_out)
+        if "ffn" in layer_params:
+            if "router" in layer_params["ffn"]:
+                ffn_out, aux = apply_moe(layer_params["ffn"], x, cfg)
+            else:
+                ffn_out = apply_mlp(layer_params["ffn"], x, cfg)
+            x = x + grad_cast(ffn_out)
+        return x, new_cache, aux
+
+    def _group_fwd(self, group_params, x, positions, group_cache):
+        cfg = self.cfg
+        new_caches = {}
+        aux_sum = {"moe_load_balance": 0.0, "moe_z_loss": 0.0}
+        for i, kind in enumerate(cfg.block_pattern):
+            slot = f"slot{i}"
+            cache_i = None if group_cache is None else group_cache[slot]
+            x, nc, aux = self._layer_fwd(
+                group_params[slot], kind, x, positions, cache_i
+            )
+            new_caches[slot] = nc
+            for k, v in aux.items():
+                aux_sum[k] = aux_sum[k] + v
+        if group_cache is None:
+            new_caches = None
+        return x, new_caches, (
+            jnp.asarray(aux_sum["moe_load_balance"], jnp.float32),
+            jnp.asarray(aux_sum["moe_z_loss"], jnp.float32),
+        )
+
+    def _stack_fwd(self, params, x, positions, caches):
+        """Run all groups (scanned) + tail layers.
+
+        With caches (prefill/decode) the FULL stacked cache rides in the
+        scan CARRY and each group updates its slice in place via
+        dynamic-update-slice — passing caches as scan xs/ys double-buffers
+        them (measured +2.5× cache bytes of temp at decode_32k).
+        """
+        cfg = self.cfg
+
+        if caches is None:
+            def body_nc(h, gp):
+                h, _, aux = self._group_fwd(gp, h, positions, None)
+                return h, aux
+
+            fn_nc = jax.checkpoint(body_nc) if cfg.remat == "full" else body_nc
+            x, auxs = jax.lax.scan(fn_nc, x, params["groups"])
+            new_group_caches = None
+        else:
+            group_caches = caches["groups"]
+
+            def body(carry, xs):
+                h, cache_all = carry
+                gp, gi = xs
+                gc = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, gi, 0, keepdims=False
+                    ),
+                    cache_all,
+                )
+                h, nc, aux = self._group_fwd(gp, h, positions, gc)
+                cache_all = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), gi, 0
+                    ),
+                    cache_all, nc,
+                )
+                return (h, cache_all), aux
+
+            gidx = jnp.arange(cfg.n_groups, dtype=jnp.int32)
+            (x, new_group_caches), auxs = jax.lax.scan(
+                body, (x, group_caches), (params["groups"], gidx)
+            )
+
+        aux = {
+            "moe_load_balance": jnp.sum(auxs[0]),
+            "moe_z_loss": jnp.sum(auxs[1]),
+        }
+
+        new_tail = {}
+        if cfg.tail_pattern:
+            for i, kind in enumerate(cfg.tail_pattern):
+                tp = params["tail"][f"tail{i}"]
+                tc = None if caches is None else caches["tail"][f"tail{i}"]
+                x, nc, aux_t = self._layer_fwd(tp, kind, x, positions, tc)
+                new_tail[f"tail{i}"] = nc
+                for k, v in aux_t.items():
+                    aux[k] = aux[k] + v
+
+        new_caches = None
+        if caches is not None:
+            new_caches = {"groups": new_group_caches, "tail": new_tail}
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def _hidden(self, params, tokens, prefix_embeds=None):
+        """Embed + full stack -> (hidden (B,S,D), aux)."""
+        x = self._embed(params, tokens, prefix_embeds)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, _, aux = self._stack_fwd(params, x, positions, None)
+        return x, aux
+
+    def apply(self, params, tokens, prefix_embeds=None):
+        """Full-sequence forward (training). Returns (logits, aux)."""
+        x, aux = self._hidden(params, tokens, prefix_embeds)
+        return self._logits(params, x), aux
+
+    # tokens of logits materialized per CE chunk; (B·s_chunk, V) buffers
+    # stay ≲ a few hundred MB/device even for unsharded-vocab policies
+    # (§Perf iteration 14: chunked cross-entropy)
+    LOSS_CHUNK_TOKENS = 16_384
+
+    def _ce_terms(self, params, x_c, targets_c, mask_c):
+        """Σ masked nll over one chunk (fp32). x_c (B,s,D)."""
+        cfg = self.cfg
+        logits_f = self._logits(params, x_c).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits_f, axis=-1)
+        if cfg.n_codebooks:
+            gold = jnp.take_along_axis(
+                logits_f, targets_c[..., None], axis=-1
+            )[..., 0]
+            nll = (logz - gold).mean(-1)
+        else:
+            gold = jnp.take_along_axis(
+                logits_f, targets_c[..., None], axis=-1
+            )[..., 0]
+            nll = logz - gold
+        return (nll * mask_c).sum()
+
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux), chunked over the sequence so the
+        (B, S, V) logits are never materialized whole. batch: tokens,
+        targets, loss_mask[, prefix_embeds]. Returns (scalar, metrics)."""
+        cfg = self.cfg
+        x, aux = self._hidden(
+            params, batch["tokens"], batch.get("prefix_embeds")
+        )
+        targets = batch["targets"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        if prefix := (x.shape[1] - targets.shape[1]):
+            x = x[:, prefix:]  # vlm: no loss on patch positions
+
+        B, S = x.shape[:2]
+        n_chunks = max(1, (B * S) // max(self.LOSS_CHUNK_TOKENS, 1))
+        while n_chunks > 1 and S % n_chunks:
+            n_chunks -= 1
+        if n_chunks <= 1:
+            nll_sum = self._ce_terms(params, x, targets, mask)
+        else:
+            sc = S // n_chunks
+
+            def split(t):
+                return jnp.moveaxis(
+                    t.reshape((B, n_chunks, sc) + t.shape[2:]), 1, 0
+                )
+
+            def body(acc, inp):
+                x_c, t_c, m_c = inp
+                return acc + self._ce_terms(params, x_c, t_c, m_c), None
+
+            # checkpoint: recompute each chunk's logits in backward
+            nll_sum, _ = jax.lax.scan(
+                jax.checkpoint(body),
+                jnp.zeros((), jnp.float32),
+                (split(x), split(targets), split(mask)),
+            )
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = nll_sum / denom
+        total = (
+            ce
+            + 0.01 * aux["moe_load_balance"]
+            + 0.001 * aux["moe_z_loss"]
+        )
+        metrics = {
+            "ce": ce,
+            "moe_load_balance": aux["moe_load_balance"],
+            "moe_z_loss": aux["moe_z_loss"],
+            "tokens": mask.sum(),
+        }
+        return total, metrics
+
+    # -- serving -----------------------------------------------------------
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+
+        def one(kind):
+            if kind == "attn":
+                return init_attn_cache(cfg, batch, max_seq, dt)
+            if kind == "mamba":
+                return init_mamba_cache(cfg, batch, dt)
+            return init_rglru_cache(cfg, batch, dt)
+
+        def group_cache():
+            return {
+                f"slot{i}": one(kind)
+                for i, kind in enumerate(cfg.block_pattern)
+            }
+
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape),
+            group_cache(),
+        )
+        tail = {
+            f"tail{i}": one(kind)
+            for i, kind in enumerate(cfg.tail_pattern)
+        }
+        return {"groups": stacked, "tail": tail}
+
+    def prefill(self, params, tokens, max_seq: int, prefix_embeds=None):
+        """Process a prompt, build caches. Returns (last_logits, caches)."""
+        x = self._embed(params, tokens, prefix_embeds)
+        B, S = x.shape[:2]
+        caches = self.init_cache(B, max_seq)
+        positions = jnp.arange(S)
+        x, caches, _ = self._stack_fwd(params, x, positions, caches)
+        return self._logits(params, x[:, -1:]), caches
+
+    def decode_step(self, params, tokens_new, caches, pos):
+        """One decode step. tokens_new (B, 1[, K]); pos int32[B] lengths so
+        far. Returns (logits (B,1,V[,K]), new_caches)."""
+        x = self._embed(params, tokens_new)
+        positions = pos[:, None] if pos.ndim == 1 else pos
+        x, caches, _ = self._stack_fwd(params, x, positions, caches)
+        return self._logits(params, x), caches

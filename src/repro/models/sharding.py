@@ -1,0 +1,219 @@
+"""Mesh/sharding policy: DP(+pod) × FSDP × TP/EP, GSPMD-propagated.
+
+One policy object describes how every tensor class maps onto the mesh:
+
+  dp axes  ('pod','data') / ('data',) — batch parallel + FSDP param shards
+  tp axis  'model'                    — heads / d_ff / vocab / experts
+
+Activation constraints are applied through ``constrain`` which is a no-op
+when no policy is active (single-device tests) — model code stays
+mesh-agnostic. Param shardings are derived from leaf *names* via the rule
+table below and work for arbitrary leading stack dims (scan-over-layers).
+
+KV-cache sharding is adaptive (DESIGN.md §6): if the arch's kv-head count
+divides the tp axis we shard heads; otherwise we shard the cache's
+sequence dim (flash-decoding style partial-attention, XLA collectives) —
+avoiding GSPMD padding blowup for kv ∈ {1, 8} archs on a 16-way tp axis.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def prune_spec(mesh: Mesh, shape, entries, allow_uneven: bool = False) -> P:
+    """Drop (or shrink) spec entries whose mesh size doesn't divide the dim.
+
+    jit in/out shardings require exact divisibility; production archs have
+    dims like kv_heads=8 on a 16-way tp axis or batch=1 on the dp axes —
+    those dims fall back to replication (or a dividing prefix of the dp
+    tuple, e.g. batch 2 on ('pod','data') shards over 'pod' only).
+
+    ``allow_uneven`` (used for activation *constraints*, where GSPMD pads
+    internally) keeps an axis as long as the dim is at least the axis size
+    — e.g. 56 heads on a 16-way axis shard 4/4/…/4 with padding.
+    """
+    out = []
+    for d, entry in enumerate(entries):
+        if entry is None or d >= len(shape):
+            out.append(None)
+            continue
+        ok = (
+            (lambda n, a: n % a == 0) if not allow_uneven
+            else (lambda n, a: n >= a)
+        )
+        if isinstance(entry, tuple):
+            chosen = None
+            for take in range(len(entry), 0, -1):
+                sub = entry[:take]
+                if ok(shape[d], _axis_size(mesh, sub)):
+                    chosen = sub if take > 1 else sub[0]
+                    break
+            out.append(chosen)
+        else:
+            out.append(entry if ok(shape[d], _axis_size(mesh, entry)) else None)
+    return P(*out)
+
+
+@dataclass(frozen=True)
+class MeshPolicy:
+    mesh: Mesh | None = None
+    dp: tuple[str, ...] = ()  # data-parallel + FSDP axes
+    tp: str | None = None  # tensor/expert axis
+    shard_cache_seq: bool = False  # decode cache: shard S instead of heads
+    seq_parallel: bool = False  # Megatron-SP: hidden (B,S,D) shards S on tp
+    # (norms/mlp/router are per-token so they run seq-sharded with zero
+    # comm; attention gathers k/v per layer; remat carry stacks shrink by
+    # the tp factor — see EXPERIMENTS.md §Perf iteration B)
+
+    @property
+    def dp_spec(self):
+        return self.dp if self.dp else None
+
+    def sharding(self, *axes, shape=None) -> NamedSharding:
+        assert self.mesh is not None
+        spec = prune_spec(self.mesh, shape, axes) if shape is not None else P(*axes)
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, *axes):
+        if self.mesh is None:
+            return x
+        # activation constraints tolerate uneven dims (GSPMD pads)
+        spec = prune_spec(self.mesh, x.shape, axes, allow_uneven=True)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    # -- activation constraint helpers --------------------------------------
+    def act_bsd(self, x):  # (B, S, D) hidden
+        if self.seq_parallel and x.shape[-2] > 1:  # decode (S=1) opts out
+            return self.constrain(x, self.dp_spec, self.tp, None)
+        return self.constrain(x, self.dp_spec, None, None)
+
+    def act_bshd(self, x):  # (B, S, H, Dh) per-head
+        return self.constrain(x, self.dp_spec, None, self.tp, None)
+
+    def act_bsf(self, x):  # (B, S, F) ffn hidden
+        return self.constrain(x, self.dp_spec, None, self.tp)
+
+    def act_logits(self, x):  # (B, S, V)
+        return self.constrain(x, self.dp_spec, None, self.tp)
+
+    def act_ecd(self, x):  # (E, C, D) MoE dispatch buffers
+        return self.constrain(x, self.tp, None, None)
+
+    def cache_entries(self):  # (B, S, Hkv, Dh)
+        if self.shard_cache_seq:
+            return (self.dp_spec, self.tp, None, None)
+        return (self.dp_spec, None, self.tp, None)
+
+    def cache(self, x):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(*self.cache_entries(), shape=x.shape)
+        )
+
+
+# Active policy: plumbed as a module-level context so model code can stay
+# signature-stable; launch/train/dryrun install the real policy.
+_ACTIVE = MeshPolicy()
+
+
+def active_policy() -> MeshPolicy:
+    return _ACTIVE
+
+
+@contextmanager
+def use_policy(policy: MeshPolicy):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = policy
+    try:
+        yield policy
+    finally:
+        _ACTIVE = prev
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (FSDP over dp, TP/EP over tp) — by leaf name,
+# applied to the TRAILING dims; leading stack dims get None.
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / head: vocab over tp, d_model over dp (FSDP)
+    (r"embed", ("tp", "dp")),
+    (r"head", ("dp", "tp")),
+    # attention
+    (r"\bwq$", ("dp", "tp", None)),
+    (r"\bwk$", ("dp", "tp", None)),
+    (r"\bwv$", ("dp", "tp", None)),
+    (r"\bwo$", ("tp", None, "dp")),
+    # mlp
+    (r"w_gate$", ("dp", "tp")),
+    (r"w_up$", ("dp", "tp")),
+    (r"w_down$", ("tp", "dp")),
+    # moe
+    (r"router", (None, None)),
+    (r"experts_gate$", ("tp", "dp", None)),
+    (r"experts_up$", ("tp", "dp", None)),
+    (r"experts_down$", ("tp", None, "dp")),
+    (r"shared_(gate|up)$", ("dp", "tp")),
+    (r"shared_down$", ("tp", "dp")),
+    # mamba
+    (r"in_proj$", ("dp", "tp")),
+    (r"out_proj$", ("tp", "dp")),
+    (r"conv_w$", (None, "tp")),
+    # rglru
+    (r"\bw_in$", ("dp", "tp")),
+    (r"\bw_gate_branch$", ("dp", "tp")),
+    (r"\bw_a$", (None, "tp")),
+    (r"\bw_x$", (None, "tp")),
+    (r"w_rnn_out$", ("tp", "dp")),
+]
+
+
+def _spec_for(name: str, shape, policy: MeshPolicy) -> P:
+    ndim = len(shape)
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, name):
+            trailing = [
+                policy.dp_spec if r == "dp" else policy.tp if r == "tp" else None
+                for r in rule
+            ]
+            if len(trailing) > ndim:  # tiny/fused param; replicate
+                return P()
+            entries = [None] * (ndim - len(trailing)) + trailing
+            return prune_spec(policy.mesh, shape, entries)
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_specs(params_shape, policy: MeshPolicy):
+    """PartitionSpec pytree matching a params(-shape) pytree by leaf name."""
+
+    def leaf_spec(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        return _spec_for(name, leaf.shape, policy)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def param_shardings(params_shape, policy: MeshPolicy):
+    specs = param_specs(params_shape, policy)
+    return jax.tree.map(lambda s: NamedSharding(policy.mesh, s), specs)

@@ -1,0 +1,146 @@
+"""Fault-tolerant, topology-independent checkpointing.
+
+Layout (one directory per step):
+
+  <dir>/step_00001200/
+      arrays.npz        every leaf, flattened with path-derived keys
+      manifest.json     treedef paths, shapes, dtypes, step, data state
+      COMMITTED         empty marker written LAST (atomic-commit point)
+
+Properties required at 1000-node scale, all honored here in single-host
+form (multi-host would shard arrays.npz per process and commit via
+process-0 after a barrier — the layout is unchanged):
+
+* atomic: readers only trust directories with the COMMITTED marker;
+  half-written checkpoints (preemption mid-save) are invisible and later
+  garbage-collected.
+* resumable-exact: the data-pipeline state (seed, step) is in the
+  manifest, so a restart replays the exact batch sequence (tests assert
+  bitwise-equal resumed training).
+* topology-independent: arrays are saved unsharded-logical; ``restore``
+  re-shards onto whatever mesh the new job runs (elastic scaling: a
+  checkpoint from 512 chips restores onto 256 or 1024).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import jax
+
+COMMIT_MARKER = "COMMITTED"
+
+
+def _leaf_key(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def save_checkpoint(
+    ckpt_dir: str | Path,
+    step: int,
+    state,
+    data_state: dict | None = None,
+    keep_last: int = 3,
+) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(state)
+    arrays = {}
+    keys = []
+    for path, leaf in leaves_with_paths:
+        key = _leaf_key(path)
+        keys.append(key)
+        arrays[key] = np.asarray(jax.device_get(leaf))
+
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "data_state": data_state or {},
+        "format": "repro-ckpt/1",
+    }
+
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / COMMIT_MARKER).touch()
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic on POSIX
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep_last: int) -> None:
+    steps = sorted(d for d in ckpt_dir.glob("step_*") if d.is_dir())
+    committed = [d for d in steps if (d / COMMIT_MARKER).exists()]
+    for d in committed[:-keep_last]:
+        shutil.rmtree(d, ignore_errors=True)
+    # half-written tmp dirs from preempted saves
+    for d in ckpt_dir.glob(".tmp_*"):
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_checkpoint(ckpt_dir: str | Path) -> Path | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(d for d in ckpt_dir.glob("step_*") if d.is_dir())
+    for d in reversed(steps):
+        if (d / COMMIT_MARKER).exists():
+            return d
+    return None
+
+
+def restore_checkpoint(
+    path: str | Path, state_template, shardings=None
+) -> tuple[object, int, dict]:
+    """Restore onto the current topology.
+
+    state_template: a pytree with the target structure (shapes must match
+    the save). shardings: optional matching pytree of NamedSharding for
+    resharded device placement (elastic restore).
+    Returns (state, step, data_state).
+    """
+    path = Path(path)
+    if not (path / COMMIT_MARKER).exists():
+        raise ValueError(f"checkpoint {path} is not committed")
+    manifest = json.loads((path / "manifest.json").read_text())
+    z = np.load(path / "arrays.npz")
+
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        state_template
+    )
+    new_leaves = []
+    flat_shardings = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    for i, (p, leaf) in enumerate(leaves_with_paths):
+        key = _leaf_key(p)
+        if key not in z:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = z[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}"
+            )
+        arr = arr.astype(leaf.dtype)
+        if flat_shardings is not None:
+            new_leaves.append(jax.device_put(arr, flat_shardings[i]))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return state, int(manifest["step"]), manifest.get("data_state", {})

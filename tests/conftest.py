@@ -1,0 +1,34 @@
+import numpy as np
+import pytest
+
+import jax
+
+# Tests run on the single real CPU device. (The 512-device override lives
+# ONLY in launch/dryrun.py, per the dry-run contract.)
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def small_mixed_network():
+    """100-node network with one layer of each benchmark type (paper §4)."""
+    from repro.core.api import addlayer, createnetwork, createnodeset, generate
+
+    net = createnetwork(createnodeset(100))
+    net = generate(addlayer(net, "er", 1), "er", type="er", p=0.05, seed=1)
+    net = generate(addlayer(net, "ws", 1), "ws", type="ws", k=4, beta=0.1, seed=2)
+    net = generate(addlayer(net, "ba", 1), "ba", type="ba", m=3, seed=3)
+    net = generate(addlayer(net, "wk", 2), "wk", type="2mode", h=10, a=3, seed=4)
+    return net
+
+
+def onemode_to_networkx(layer):
+    import networkx as nx
+
+    indptr = np.asarray(layer.out.indptr)
+    indices = np.asarray(layer.out.indices)
+    g = nx.DiGraph() if layer.directed else nx.Graph()
+    g.add_nodes_from(range(layer.out.n_rows))
+    for u in range(layer.out.n_rows):
+        for v in indices[indptr[u] : indptr[u + 1]]:
+            g.add_edge(u, int(v))
+    return g

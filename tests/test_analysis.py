@@ -1,0 +1,109 @@
+"""Analysis functions vs networkx oracles (BFS, components, density)."""
+
+import numpy as np
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+
+from conftest import onemode_to_networkx
+from repro.core import (
+    bfs_distances,
+    connected_components,
+    create_network,
+    degree_centrality,
+    density,
+    erdos_renyi,
+    shortest_path_length,
+    two_mode_from_memberships,
+)
+from repro.core.analysis import attribute_summary
+
+INF = 2**31 - 1
+
+
+@pytest.fixture(scope="module")
+def er_net():
+    net = create_network(60)
+    return net.with_layer("er", erdos_renyi(60, 0.06, seed=7))
+
+
+def test_bfs_matches_networkx(er_net):
+    g = onemode_to_networkx(er_net.layer("er"))
+    want = nx.single_source_shortest_path_length(g, 0)
+    got = np.asarray(bfs_distances(er_net, 0))
+    for v in range(60):
+        if v in want:
+            assert got[v] == want[v], f"node {v}"
+        else:
+            assert got[v] == INF
+
+
+def test_shortest_path_pair_matches_networkx(er_net):
+    g = onemode_to_networkx(er_net.layer("er"))
+    for target in (5, 17, 42):
+        try:
+            want = nx.shortest_path_length(g, 0, target)
+        except nx.NetworkXNoPath:
+            want = -1
+        assert shortest_path_length(er_net, 0, target) == want
+
+
+def test_components_match_networkx(er_net):
+    g = onemode_to_networkx(er_net.layer("er"))
+    want_sets = list(nx.connected_components(g))
+    labels = np.asarray(connected_components(er_net))
+    got = {}
+    for v, l in enumerate(labels):
+        got.setdefault(int(l), set()).add(v)
+    assert sorted(map(sorted, got.values())) == sorted(map(sorted, want_sets))
+
+
+def test_bfs_through_two_mode_is_pseudo_projected():
+    # chain: 0 -h0- 1 -h1- 2 ; pseudo-projected distances: d(0,1)=1, d(0,2)=2
+    net = create_network(3)
+    layer = two_mode_from_memberships(
+        3, 2, np.array([0, 1, 1, 2]), np.array([0, 0, 1, 1])
+    )
+    net = net.with_layer("aff", layer)
+    d = np.asarray(bfs_distances(net, 0))
+    np.testing.assert_array_equal(d, [0, 1, 2])
+    assert shortest_path_length(net, 0, 2) == 2
+
+
+def test_multilayer_bfs_uses_union(small_mixed_network):
+    d_all = np.asarray(bfs_distances(small_mixed_network, 0))
+    d_er = np.asarray(bfs_distances(small_mixed_network, 0, ["er"]))
+    assert np.all(d_all <= d_er)
+
+
+def test_components_through_two_mode():
+    net = create_network(6)
+    # hyperedge 0: {0,1,2}; hyperedge 1: {3,4}; node 5 isolated
+    layer = two_mode_from_memberships(
+        6, 2, np.array([0, 1, 2, 3, 4]), np.array([0, 0, 0, 1, 1])
+    )
+    net = net.with_layer("aff", layer)
+    labels = np.asarray(connected_components(net))
+    assert labels[0] == labels[1] == labels[2]
+    assert labels[3] == labels[4]
+    assert len({labels[0], labels[3], labels[5]}) == 3
+
+
+def test_density_and_degree(er_net):
+    g = onemode_to_networkx(er_net.layer("er"))
+    assert density(er_net.layer("er")) == pytest.approx(nx.density(g))
+    degs = np.asarray(degree_centrality(er_net))
+    for v in range(60):
+        assert degs[v] == g.degree[v]
+
+
+def test_attribute_summary():
+    from repro.core import create_nodeset
+
+    ns = create_nodeset(10).set_attr(
+        "income", "float", np.array([1, 3, 5]), np.array([10.0, 20.0, 30.0])
+    )
+    net = create_network(ns)
+    s = attribute_summary(net, "income")
+    assert s["n_set"] == 3 and s["coverage"] == pytest.approx(0.3)
+    assert s["mean"] == pytest.approx(20.0)

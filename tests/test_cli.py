@@ -1,0 +1,74 @@
+"""CLI console (paper §3.4): Listing 2/3 scripts in text and JSON modes."""
+
+import json
+
+import pytest
+
+from repro.core.cli import CLIError, Session
+
+SCRIPT = """
+# paper Listing 2, mini
+nodes = createnodeset(createnodes = 500)
+net = createnetwork(nodeset = nodes)
+addlayer(net, "Random", mode = 1, directed = false)
+generate(net, "Random", type = er, p = 0.02, seed = 1)
+addlayer(net, "Workplaces", mode = 2)
+generate(net, "Workplaces", type = 2mode, h = 10, a = 4, seed = 2)
+"""
+
+
+def test_listing2_script_builds_network():
+    s = Session()
+    s.run_script(SCRIPT)
+    net = s.env["net"]
+    assert net.layer_names == ("Random", "Workplaces")
+    assert net.n_nodes == 500
+    assert net.layer("Workplaces").n_memberships > 0
+
+
+def test_listing3_queries_text_mode():
+    s = Session()
+    s.run_script(SCRIPT)
+    out = s.run_line("checkedge(net, Workplaces, 10, 20)")
+    assert out in ("True", "False")
+    out = s.run_line("getedge(net, Workplaces, 10, 20)")
+    float(out)
+    out = s.run_line("getnodealters(net, 10, layernames = Workplaces; Random)")
+    assert out.startswith("[")
+    out = s.run_line("shortestpath(net, 0, 100)")
+    int(out)
+    out = s.run_line("memoryreport(net)")
+    assert "Workplaces" in out
+
+
+def test_json_mode_for_threadler(tmp_path):
+    """JSON mode is what the R frontend drives (paper §3.4)."""
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    rec = json.loads(s.run_line("getedge(net, Workplaces, 10, 20)"))
+    assert rec["command"] == "getedge"
+    assert isinstance(rec["result"], float)
+    rep = json.loads(s.run_line("memoryreport(net)"))
+    layers = {l["name"]: l for l in rep["result"]["layers"]}
+    assert layers["Workplaces"]["equivalent_projected_edges"] > 0
+
+    out = s.run_line(f'savefile(net, file = "{tmp_path}/n.npz")')
+    s2 = Session(mode="json")
+    s2.run_line(f'net2 = loadfile(file = "{tmp_path}/n.npz")')
+    rec2 = json.loads(s2.run_line("getedge(net2, Workplaces, 10, 20)"))
+    assert rec2["result"] == rec["result"]
+
+
+def test_rebinding_semantics():
+    """addlayer/generate rebind every alias (functional engine)."""
+    s = Session()
+    s.run_script(SCRIPT)
+    s.env["alias"] = s.env["net"]
+    s.run_line('addlayer(net, "Extra", mode = 1)')
+    assert s.env["alias"].layer_names == s.env["net"].layer_names
+
+
+def test_unknown_command_raises():
+    s = Session()
+    with pytest.raises(CLIError):
+        s.run_line("frobnicate(x)")

@@ -1,0 +1,145 @@
+"""Unit + property tests for the CSR primitive."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csr import (
+    SENTINEL,
+    csr_contains,
+    csr_from_coo,
+    csr_row_gather,
+    csr_row_sample,
+    csr_transpose,
+    csr_value_at,
+    padded_unique,
+    sorted_isin,
+)
+
+
+def _random_coo(rng, n_rows, n_cols, nnz):
+    rows = rng.integers(0, n_rows, size=nnz)
+    cols = rng.integers(0, n_cols, size=nnz)
+    return rows, cols
+
+
+def test_construction_sorted_and_deduped():
+    rows = np.array([2, 0, 2, 2, 1, 0])
+    cols = np.array([3, 1, 3, 0, 2, 1])
+    csr = csr_from_coo(rows, cols, 3, 4)
+    assert csr.nnz == 4  # (0,1),(1,2),(2,0),(2,3)
+    np.testing.assert_array_equal(np.asarray(csr.indptr), [0, 1, 2, 4])
+    np.testing.assert_array_equal(np.asarray(csr.indices), [1, 2, 0, 3])
+
+
+def test_sum_duplicates():
+    csr = csr_from_coo(
+        np.array([0, 0, 0]), np.array([1, 1, 2]), 2, 3,
+        values=np.array([1.0, 2.0, 5.0]), dedup=False, sum_duplicates=True,
+    )
+    assert csr.nnz == 2
+    np.testing.assert_allclose(np.asarray(csr.values), [3.0, 5.0])
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        csr_from_coo(np.array([0]), np.array([5]), 2, 3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(1, 30),  # n_rows
+    st.integers(1, 30),  # n_cols
+    st.integers(0, 200),  # nnz
+    st.integers(0, 2**31 - 1),  # seed
+)
+def test_contains_matches_dense(n_rows, n_cols, nnz, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = _random_coo(rng, n_rows, n_cols, nnz)
+    csr = csr_from_coo(rows, cols, n_rows, n_cols)
+    dense = np.zeros((n_rows, n_cols), dtype=bool)
+    dense[rows, cols] = True
+    qu = rng.integers(0, n_rows, size=64)
+    qv = rng.integers(0, n_cols, size=64)
+    got = np.asarray(csr_contains(csr, jnp.asarray(qu), jnp.asarray(qv)))
+    np.testing.assert_array_equal(got, dense[qu, qv])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_value_at_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    n = 20
+    rows, cols = _random_coo(rng, n, n, 80)
+    vals = rng.random(80).astype(np.float32)
+    csr = csr_from_coo(rows, cols, n, n, values=vals, dedup=False,
+                       sum_duplicates=True)
+    dense = np.zeros((n, n), dtype=np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    qu = rng.integers(0, n, size=50)
+    qv = rng.integers(0, n, size=50)
+    got = np.asarray(csr_value_at(csr, jnp.asarray(qu), jnp.asarray(qv)))
+    np.testing.assert_allclose(got, dense[qu, qv], rtol=1e-5)
+
+
+def test_row_gather_pads_and_truncates():
+    csr = csr_from_coo(
+        np.array([0, 0, 0, 1]), np.array([2, 0, 1, 3]), 3, 4
+    )
+    vals, mask = csr_row_gather(csr, jnp.array([0, 1, 2]), max_len=2)
+    np.testing.assert_array_equal(np.asarray(mask), [[1, 1], [1, 0], [0, 0]])
+    np.testing.assert_array_equal(np.asarray(vals[0]), [0, 1])  # truncated row 0
+    assert int(vals[1, 1]) == SENTINEL
+
+
+def test_transpose_roundtrip():
+    rng = np.random.default_rng(0)
+    rows, cols = _random_coo(rng, 17, 11, 60)
+    csr = csr_from_coo(rows, cols, 17, 11)
+    back = csr_transpose(csr_transpose(csr))
+    np.testing.assert_array_equal(np.asarray(back.indptr), np.asarray(csr.indptr))
+    np.testing.assert_array_equal(np.asarray(back.indices), np.asarray(csr.indices))
+
+
+def test_row_sample_uniform_and_dangling():
+    csr = csr_from_coo(np.array([0, 0, 0, 0]), np.array([1, 2, 3, 4]), 6, 6)
+    import jax
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 500)
+    samples = np.array(
+        [int(csr_row_sample(csr, jnp.array([0]), k)[0][0]) for k in keys[:200]]
+    )
+    assert set(samples) == {1, 2, 3, 4}
+    # dangling row stays put
+    s, valid = csr_row_sample(csr, jnp.array([5]), keys[0])
+    assert int(s[0]) == 5 and not bool(valid[0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(1, 16))
+def test_sorted_isin_matches_numpy(seed, ka, kb):
+    rng = np.random.default_rng(seed)
+    la, lb = rng.integers(0, ka + 1), rng.integers(0, kb + 1)
+    a_set = np.sort(rng.choice(50, size=la, replace=False)) if la else np.array([], int)
+    b_set = np.sort(rng.choice(50, size=lb, replace=False)) if lb else np.array([], int)
+    a = np.full(ka, SENTINEL, dtype=np.int32)
+    b = np.full(kb, SENTINEL, dtype=np.int32)
+    a[:la], b[:lb] = a_set, b_set
+    am = np.arange(ka) < la
+    bm = np.arange(kb) < lb
+    got = np.asarray(
+        sorted_isin(
+            jnp.asarray(a)[None], jnp.asarray(am)[None],
+            jnp.asarray(b)[None], jnp.asarray(bm)[None],
+        )
+    )[0]
+    want = np.isin(a, b_set) & am
+    np.testing.assert_array_equal(got, want)
+
+
+def test_padded_unique():
+    vals = jnp.asarray(np.array([[5, 3, 5, 1, SENTINEL, 3]], dtype=np.int32))
+    valid = jnp.asarray(np.array([[1, 1, 1, 1, 0, 1]], dtype=bool))
+    u, m = padded_unique(vals, valid)
+    np.testing.assert_array_equal(np.asarray(u[0][np.asarray(m[0])]), [1, 3, 5])

@@ -1,0 +1,163 @@
+"""Walker-based estimators + temporal sequences (paper §5–6 roadmap)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    create_network,
+    create_nodeset,
+    erdos_renyi,
+    one_mode_from_edges,
+    two_mode_from_memberships,
+    watts_strogatz,
+)
+from repro.core.estimators import (
+    estimate_assortativity,
+    estimate_component_mass,
+    estimate_degree_distribution,
+    estimate_mean_degree,
+)
+from repro.core.network import Network
+from repro.core.temporal import TemporalNetwork
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def er_net():
+    net = create_network(800)
+    return net.with_layer("er", erdos_renyi(800, 8.0 / 800, seed=2))
+
+
+def test_mean_degree_estimator(er_net):
+    exact = float(np.mean(np.asarray(er_net.layer("er").degrees())))
+    est = estimate_mean_degree(er_net, 2048, jax.random.PRNGKey(0))
+    assert est == pytest.approx(exact, rel=0.15)
+
+
+def test_degree_distribution_estimator():
+    # regular graph: the reweighted walk histogram must be a point mass
+    net = create_network(300).with_layer(
+        "ws", watts_strogatz(300, 6, beta=0.0, seed=0)
+    )
+    hist = estimate_degree_distribution(
+        net, 128, 40, jax.random.PRNGKey(1), max_degree=16
+    )
+    assert hist[6] > 0.99
+
+
+def test_assortativity_estimator_positive_mixing():
+    # two cliques-by-affiliation with distinct attribute values: edges stay
+    # within groups -> assortativity ~ +1
+    n = 40
+    memb = np.concatenate([np.zeros(20, int), np.ones(20, int)])
+    layer = two_mode_from_memberships(n, 2, np.arange(n), memb)
+    ns = create_nodeset(n).set_attr(
+        "group", "float", np.arange(n), memb.astype(float) * 10
+    )
+    net = Network(nodeset=ns, layers=(layer,), layer_names=("aff",))
+    r = estimate_assortativity(net, "group", 64, 30, jax.random.PRNGKey(2))
+    assert r > 0.9
+
+
+def test_component_mass_estimator():
+    # two halves: a connected ring (mass 0.5) and isolated nodes
+    n = 400
+    src = np.arange(0, n // 2 - 1)
+    layer = one_mode_from_edges(n, src, src + 1, directed=False)
+    net = create_network(n).with_layer("ring", layer)
+    mass = estimate_component_mass(
+        net, 128, 64, jax.random.PRNGKey(3), n_probe=400
+    )
+    # probes in the isolated half never collide with the trace
+    assert 0.3 < mass < 0.7
+
+
+# ---------------------------------------------------------------------------
+# temporal sequences
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def temporal():
+    n = 60
+    ns = create_nodeset(n)
+
+    def year_net(seed, with_jobs):
+        net = Network(nodeset=ns, layers=(), layer_names=())
+        net = net.with_layer("kin", watts_strogatz(n, 4, 0.1, seed=seed))
+        if with_jobs:
+            rng = np.random.default_rng(seed)
+            layer = two_mode_from_memberships(
+                n, 4, np.arange(n), rng.integers(0, 4, n)
+            )
+            net = net.with_layer("jobs", layer)
+        return net
+
+    return TemporalNetwork.from_snapshots(
+        [(2019, year_net(1, False)), (2020, year_net(2, True)),
+         (2021, year_net(3, True))]
+    )
+
+
+def test_snapshots_and_years(temporal):
+    assert temporal.years == (2019, 2020, 2021)
+    assert "jobs" not in temporal.at(2019).layer_names
+    assert "jobs" in temporal.at(2020).layer_names
+    with pytest.raises(KeyError):
+        temporal.at(1999)
+
+
+def test_edge_years_pseudo_projected(temporal):
+    layer = temporal.at(2020).layer("jobs")
+    memb = np.asarray(layer.memb.indices)
+    # find two nodes sharing a hyperedge in 2020
+    u = 0
+    alters, mask = layer.node_alters(jnp.asarray([u]), 60)
+    v = int(np.asarray(alters[0])[np.asarray(mask[0])][0])
+    years = temporal.edge_years("jobs", u, v)
+    assert 2020 in years
+    assert 2019 not in years  # no jobs layer that year
+
+
+def test_first_contact(temporal):
+    fc = temporal.first_contact(0, 1)  # ws ring: adjacent in kin from 2019
+    assert fc == 2019
+
+
+def test_window_union_walks():
+    # walker crosses years through the union network
+    n = 30
+    ns = create_nodeset(n)
+    a = Network(nodeset=ns, layers=(), layer_names=()).with_layer(
+        "l", one_mode_from_edges(n, [0], [1], directed=False)
+    )
+    b = Network(nodeset=ns, layers=(), layer_names=()).with_layer(
+        "l", one_mode_from_edges(n, [1], [2], directed=False)
+    )
+    t = TemporalNetwork.from_snapshots([(2000, a), (2001, b)])
+    win = t.window(2000, 2001)
+    assert set(win.layer_names) == {"l@2000", "l@2001"}
+    from repro.core.analysis import shortest_path_length
+
+    # 0-2 path exists only across both years
+    assert shortest_path_length(win, 0, 2) == 2
+    assert shortest_path_length(a, 0, 2) == -1
+
+
+def test_memory_by_year(temporal):
+    mem = temporal.memory_by_year()
+    assert set(mem) == {2019, 2020, 2021}
+    assert mem[2020] > mem[2019]  # extra jobs layer costs bytes
+
+
+def test_shared_universe_enforced():
+    a = create_network(10)
+    b = create_network(11)
+    with pytest.raises(ValueError):
+        TemporalNetwork.from_snapshots([(1, a), (2, b)])

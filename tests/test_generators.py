@@ -1,0 +1,73 @@
+"""Statistical sanity for the paper's four generators (§4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    barabasi_albert,
+    erdos_renyi,
+    random_two_mode,
+    watts_strogatz,
+)
+
+
+def test_erdos_renyi_edge_count():
+    n, p = 2000, 0.005
+    layer = erdos_renyi(n, p, seed=0)
+    expected = p * n * (n - 1) / 2
+    assert layer.n_edges == pytest.approx(expected, rel=0.15)
+    assert not layer.directed
+
+
+def test_erdos_renyi_deterministic():
+    a = erdos_renyi(500, 0.01, seed=42)
+    b = erdos_renyi(500, 0.01, seed=42)
+    np.testing.assert_array_equal(np.asarray(a.out.indices), np.asarray(b.out.indices))
+    c = erdos_renyi(500, 0.01, seed=43)
+    assert a.n_edges != c.n_edges or not np.array_equal(
+        np.asarray(a.out.indices), np.asarray(c.out.indices)
+    )
+
+
+def test_erdos_renyi_extremes():
+    assert erdos_renyi(50, 0.0).n_edges == 0
+    full = erdos_renyi(50, 1.0)
+    assert full.n_edges == 50 * 49 // 2
+
+
+def test_watts_strogatz_degree_and_edges():
+    n, k = 1000, 6
+    layer = watts_strogatz(n, k, beta=0.0, seed=0)
+    assert layer.n_edges == n * k // 2
+    degs = np.asarray(layer.degrees())
+    np.testing.assert_array_equal(degs, np.full(n, k))
+    # rewired version keeps edge count close (only self-tie collisions drop)
+    rw = watts_strogatz(n, k, beta=0.3, seed=0)
+    assert rw.n_edges >= n * k // 2 * 0.95
+
+
+def test_watts_strogatz_odd_k_rejected():
+    with pytest.raises(ValueError):
+        watts_strogatz(10, 3, 0.1)
+
+
+def test_barabasi_albert_structure():
+    n, m = 500, 4
+    layer = barabasi_albert(n, m, seed=0)
+    # (n - m - 1) arrivals with m edges each, plus m seed-star edges
+    assert layer.n_edges == (n - m - 1) * m + m
+    degs = np.asarray(layer.degrees())
+    assert degs.min() >= 1
+    # heavy tail: max degree far above mean (scale-free signature)
+    assert degs.max() > 8 * degs.mean()
+
+
+def test_two_mode_poisson_memberships():
+    n, h, a = 5000, 50, 4.0
+    layer = random_two_mode(n, h, a, seed=0)
+    memb = np.asarray(layer.memb.degrees())
+    # dedup of repeated (node, hyperedge) draws shaves a little off the mean
+    assert memb.mean() == pytest.approx(a, rel=0.1)
+    sizes = np.asarray(layer.hyperedge_sizes())
+    assert sizes.mean() == pytest.approx(n * a / h, rel=0.15)
+    assert layer.equivalent_projected_edges() > layer.n_memberships

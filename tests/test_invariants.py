@@ -1,0 +1,113 @@
+"""System-level property tests (hypothesis): engine invariants that must
+hold for arbitrary graphs."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    create_network,
+    one_mode_from_edges,
+    two_mode_from_memberships,
+)
+from repro.core.analysis import bfs_distances, connected_components
+from repro.core.processing import dichotomize, symmetrize
+
+INF = 2**31 - 1
+
+
+def _random_one_mode(seed, n, m, directed=True, valued=True):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    vals = rng.uniform(0.5, 5.0, m).astype(np.float32) if valued else None
+    return one_mode_from_edges(n, src, dst, values=vals, directed=directed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 20), st.integers(0, 60))
+def test_symmetrize_is_idempotent(seed, n, m):
+    layer = _random_one_mode(seed, n, m)
+    s1 = symmetrize(layer, "max")
+    s2 = symmetrize(s1, "max")
+    np.testing.assert_array_equal(
+        np.asarray(s1.out.indices), np.asarray(s2.out.indices)
+    )
+    if s1.out.values is not None:
+        np.testing.assert_allclose(
+            np.asarray(s1.out.values), np.asarray(s2.out.values)
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 20), st.integers(0, 60))
+def test_symmetrized_layer_is_symmetric(seed, n, m):
+    sym = symmetrize(_random_one_mode(seed, n, m), "max")
+    rng = np.random.default_rng(seed + 1)
+    u = jnp.asarray(rng.integers(0, n, 64), jnp.int32)
+    v = jnp.asarray(rng.integers(0, n, 64), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(sym.edge_value(u, v)), np.asarray(sym.edge_value(v, u))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dichotomize_values_are_binary(seed):
+    layer = _random_one_mode(seed, 15, 40)
+    b = dichotomize(layer, threshold=2.0, op="ge")
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.integers(0, 15, 64), jnp.int32)
+    v = jnp.asarray(rng.integers(0, 15, 64), jnp.int32)
+    vals = np.asarray(b.edge_value(u, v))
+    assert set(np.unique(vals)) <= {0.0, 1.0}
+    # dichotomize(ge t) keeps exactly the edges with value >= t
+    orig = np.asarray(layer.edge_value(u, v))
+    np.testing.assert_array_equal(vals > 0, orig >= 2.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 16))
+def test_bfs_triangle_inequality(seed, n):
+    """d(s, v) <= d(s, u) + 1 for every edge (u, v)."""
+    layer = _random_one_mode(seed, n, 3 * n, directed=False, valued=False)
+    net = create_network(n).with_layer("l", layer)
+    d = np.asarray(bfs_distances(net, 0))
+    indptr = np.asarray(layer.out.indptr)
+    indices = np.asarray(layer.out.indices)
+    for u in range(n):
+        if d[u] == INF:
+            continue
+        for v in indices[indptr[u]:indptr[u + 1]]:
+            assert d[v] <= d[u] + 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 16), st.integers(1, 6))
+def test_components_consistent_with_bfs(seed, n, h):
+    """Nodes reachable by BFS share a component label (two-mode layer)."""
+    rng = np.random.default_rng(seed)
+    memb = rng.integers(0, 2, (n, h))
+    nodes, hypers = np.nonzero(memb)
+    layer = two_mode_from_memberships(n, h, nodes, hypers)
+    net = create_network(n).with_layer("aff", layer)
+    labels = np.asarray(connected_components(net))
+    d = np.asarray(bfs_distances(net, 0))
+    reach = d < INF
+    assert len(set(labels[reach].tolist())) == 1
+    if (~reach).any():
+        assert set(labels[~reach]) .isdisjoint({labels[0]})
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_two_mode_degree_equals_membership_count(seed):
+    rng = np.random.default_rng(seed)
+    n, h, m = 30, 5, 80
+    nodes = rng.integers(0, n, m)
+    hypers = rng.integers(0, h, m)
+    layer = two_mode_from_memberships(n, h, nodes, hypers)
+    want = np.zeros(n, dtype=np.int64)
+    for node, he in set(zip(nodes.tolist(), hypers.tolist())):
+        want[node] += 1
+    np.testing.assert_array_equal(np.asarray(layer.degrees()), want)

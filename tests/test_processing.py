@@ -1,0 +1,87 @@
+"""Processing transforms: symmetrize / dichotomize / filter / subgraph."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import one_mode_from_edges, subgraph_layer, two_mode_from_memberships
+from repro.core.processing import dichotomize, filter_edges, symmetrize
+
+
+@pytest.fixture
+def directed_valued():
+    #  0->1 (2.0), 1->0 (3.0)  reciprocated;  0->2 (5.0) one-way
+    return one_mode_from_edges(
+        3, [0, 1, 0], [1, 0, 2], values=[2.0, 3.0, 5.0], directed=True
+    )
+
+
+def test_symmetrize_max(directed_valued):
+    sym = symmetrize(directed_valued, "max")
+    assert not sym.directed
+    u = jnp.array([0, 1, 0, 2])
+    v = jnp.array([1, 0, 2, 0])
+    np.testing.assert_allclose(np.asarray(sym.edge_value(u, v)), [3, 3, 5, 5])
+
+
+def test_symmetrize_min_keeps_reciprocated_only(directed_valued):
+    sym = symmetrize(directed_valued, "min")
+    u = jnp.array([0, 0])
+    v = jnp.array([1, 2])
+    np.testing.assert_allclose(np.asarray(sym.edge_value(u, v)), [2, 0])
+
+
+def test_symmetrize_sum(directed_valued):
+    sym = symmetrize(directed_valued, "sum")
+    assert float(sym.edge_value(jnp.array([0]), jnp.array([1]))[0]) == 5.0
+
+
+def test_dichotomize(directed_valued):
+    b = dichotomize(directed_valued, threshold=2.5, op="gt")
+    assert not b.valued
+    u = jnp.array([0, 1, 0])
+    v = jnp.array([1, 0, 2])
+    np.testing.assert_array_equal(np.asarray(b.check_edge(u, v)), [0, 1, 1])
+
+
+def test_filter_edges(directed_valued):
+    f = filter_edges(directed_valued, min_value=3.0)
+    assert f.valued
+    u = jnp.array([0, 1, 0])
+    v = jnp.array([1, 0, 2])
+    np.testing.assert_allclose(np.asarray(f.edge_value(u, v)), [0, 3, 5])
+
+
+def test_filter_requires_values():
+    layer = one_mode_from_edges(3, [0], [1], directed=True)
+    with pytest.raises(ValueError):
+        filter_edges(layer, 1.0)
+
+
+def test_subgraph_one_mode():
+    layer = one_mode_from_edges(4, [0, 1, 2], [1, 2, 3], directed=False)
+    mask = np.array([True, True, True, False])
+    sub = subgraph_layer(layer, mask)
+    u = jnp.array([0, 1, 2])
+    v = jnp.array([1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(sub.check_edge(u, v)), [1, 1, 0])
+
+
+def test_subgraph_two_mode():
+    layer = two_mode_from_memberships(
+        4, 1, np.array([0, 1, 2, 3]), np.array([0, 0, 0, 0])
+    )
+    sub = subgraph_layer(layer, np.array([True, True, False, True]))
+    # node 2 removed from hyperedge; 0-1 and 0-3 still co-affiliated
+    u = jnp.array([0, 0, 0])
+    v = jnp.array([1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(sub.check_edge(u, v)), [1, 0, 1])
+
+
+def test_drop_inbound_halves_memory():
+    layer = one_mode_from_edges(100, np.arange(99), np.arange(1, 100), directed=True)
+    full = layer.nbytes
+    slim = layer.drop_inbound()
+    assert slim.nbytes < full * 0.62  # ~half (indptr overhead remains)
+    with pytest.raises(ValueError):
+        slim.node_alters(jnp.array([5]), 4, inbound=True)

@@ -1,0 +1,138 @@
+"""End-to-end behaviour: the paper's benchmark script (Listing 2) at reduced
+scale, exercised through the script-style API (Listing 3 queries), with the
+Table 1 memory methodology checked against first principles.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import random_walk
+from repro.core.api import (
+    addlayer,
+    checkedge,
+    createnetwork,
+    createnodeset,
+    generate,
+    getedge,
+    getnodealters,
+    loadfile,
+    memoryreport,
+    savefile,
+    shortestpath,
+)
+
+N = 2_000  # 1/10000 of the paper's 20M; same structure
+H, A = 10, 4  # hyperedges / mean memberships (paper: 10_000 / 20)
+
+
+@pytest.fixture(scope="module")
+def benchmark_net():
+    """Paper Listing 2, scaled: ER + WS + BA one-mode + random two-mode."""
+    nodes = createnodeset(createnodes=N)
+    net = createnetwork(nodeset=nodes)
+    net = addlayer(net, "Random", mode=1, directed=False)
+    net = generate(net, "Random", type="er", p=10 / N, seed=1)
+    net = addlayer(net, "Neighbors", mode=1, directed=False)
+    net = generate(net, "Neighbors", type="ws", k=20, beta=0.1, seed=2)
+    net = addlayer(net, "Communication", mode=1, directed=False)
+    net = generate(net, "Communication", type="ba", m=10, seed=3)
+    net = addlayer(net, "Workplaces", mode=2)
+    net = generate(net, "Workplaces", type="2mode", h=H, a=A, seed=4)
+    return net
+
+
+def test_listing3_queries(benchmark_net):
+    net = benchmark_net
+    # pseudo-projected edge existence + value agree
+    exists = checkedge(net, "Workplaces", 100, 500)
+    value = getedge(net, "Workplaces", 100, 500)
+    assert exists == (value > 0)
+
+    # alters in a single two-mode layer
+    alters = np.asarray(getnodealters(net, 100, layernames=["Workplaces"]))
+    assert 100 not in alters
+
+    # alters across one-mode layers = union of the three CSR rows
+    a_multi = np.asarray(
+        getnodealters(
+            net, 100, layernames=["Random", "Neighbors", "Communication"]
+        )
+    )
+    union = set()
+    for lname in ("Random", "Neighbors", "Communication"):
+        lay = net.layer(lname)
+        vals, mask = lay.node_alters(jnp.array([100]), 4096)
+        union |= set(np.asarray(vals[0])[np.asarray(mask[0])].tolist())
+    assert set(a_multi.tolist()) == union
+
+    # alters across layers of different modes (paper's mixed query)
+    a_mixed = np.asarray(
+        getnodealters(net, 100, layernames=["Workplaces", "Communication"])
+    )
+    assert set(alters.tolist()) <= set(a_mixed.tolist())
+
+    # shortest path across all layers <= shortest path in one layer
+    sp_all = shortestpath(net, 0, 7)
+    sp_one = shortestpath(net, 0, 7, layernames=["Neighbors"])
+    assert sp_all != -1
+    assert sp_one == -1 or sp_all <= sp_one
+
+
+def test_table1_memory_methodology(benchmark_net):
+    rep = memoryreport(benchmark_net)
+    wk = next(l for l in rep.layers if l.name == "Workplaces")
+    layer = benchmark_net.layer("Workplaces")
+
+    # Eq. (1): equivalent projected edges = sum_h k_h (k_h - 1) / 2
+    sizes = np.asarray(layer.hyperedge_sizes(), dtype=np.int64)
+    assert wk.equivalent_projected_edges == int(np.sum(sizes * (sizes - 1) // 2))
+
+    # CSR bytes: 2 * (4 B per membership) + indptr overhead
+    expected = 4 * (2 * layer.n_memberships) + 4 * (N + 1) + 4 * (H + 1)
+    assert wk.nbytes == expected
+
+    # compression ratio = 8 B * eq_edges / stored bytes, and it must beat
+    # materialization by a wide margin even at this toy scale
+    assert wk.compression_ratio == pytest.approx(
+        8 * wk.equivalent_projected_edges / wk.nbytes
+    )
+    assert wk.compression_ratio > 20
+
+
+def test_paper_scale_compression_ratio_analytic():
+    """Paper Table 1 numbers, computed analytically for OUR storage format:
+    400M memberships -> dual CSR ~= 3.28 GB vs 64 TB projection, i.e. about
+    19,500:1 — comfortably above the paper's claimed 2000:1 (which charged
+    the whole 20 GB client footprint against the projection)."""
+    n_nodes, h, memb = 20_000_000, 10_000, 400_000_000
+    eq_edges = 8e12  # paper Eq. (1)
+    csr_bytes = 4 * (2 * memb) + 4 * (n_nodes + 1) + 4 * (h + 1)
+    ratio = (8 * eq_edges) / csr_bytes
+    assert csr_bytes < 3.5 * 2**30
+    assert ratio > 2000, "must reproduce the paper's >2000:1 claim"
+    assert ratio > 19_000  # our beyond-paper margin
+
+
+def test_save_load_query_equivalence(tmp_path, benchmark_net):
+    p = tmp_path / "bench.npz"
+    savefile(benchmark_net, str(p))
+    back = loadfile(str(p))
+    u = jnp.arange(0, 200)
+    v = jnp.arange(200, 400)
+    for name in benchmark_net.layer_names:
+        np.testing.assert_allclose(
+            np.asarray(benchmark_net.edge_value(name, u, v)),
+            np.asarray(back.edge_value(name, u, v)),
+        )
+
+
+def test_multilayer_walk_is_jittable(benchmark_net):
+    walk = jax.jit(
+        lambda starts, key: random_walk(benchmark_net, starts, 16, key)
+    )
+    out = walk(jnp.arange(32, dtype=jnp.int32), jax.random.PRNGKey(0))
+    assert out.shape == (32, 17)
+    assert not np.any(np.asarray(out) < 0)
+    assert np.all(np.asarray(out) < N)

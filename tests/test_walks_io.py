@@ -1,0 +1,150 @@
+"""Random walks (pseudo-projected sampling) + binary/text IO roundtrips."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    create_network,
+    load_network,
+    memory_report,
+    neighborhood_sample,
+    one_mode_from_edges,
+    random_walk,
+    save_network,
+    two_mode_from_memberships,
+)
+from repro.core.io import export_layer_tsv, import_layer_tsv
+
+
+def _line_net():
+    net = create_network(5)
+    return net.with_layer(
+        "line", one_mode_from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4])
+    )
+
+
+def test_walk_stays_on_edges():
+    net = _line_net()
+    layer = net.layer("line")
+    paths = np.asarray(
+        random_walk(net, jnp.zeros(16, dtype=jnp.int32), 20, jax.random.PRNGKey(0))
+    )
+    for path in paths:
+        for a, b in zip(path[:-1], path[1:]):
+            if a != b:  # stay-in-place allowed only when dangling
+                assert bool(
+                    layer.check_edge(jnp.array([a]), jnp.array([b]))[0]
+                ), f"{a}->{b} not an edge"
+
+
+def test_walk_through_two_mode_never_projects():
+    # two cliques-by-affiliation bridged by node 2
+    layer = two_mode_from_memberships(
+        5, 2, np.array([0, 1, 2, 2, 3, 4]), np.array([0, 0, 0, 1, 1, 1])
+    )
+    net = create_network(5).with_layer("aff", layer)
+    paths = np.asarray(
+        random_walk(net, jnp.zeros(64, dtype=jnp.int32), 30, jax.random.PRNGKey(1))
+    )
+    # walkers must be able to reach the far clique only via node 2
+    assert (paths == 4).any()
+
+
+def test_walk_empirical_distribution_matches_projection():
+    # star affiliation: {0,1,2,3} in one hyperedge -> uniform over alters
+    layer = two_mode_from_memberships(
+        4, 1, np.array([0, 1, 2, 3]), np.array([0, 0, 0, 0])
+    )
+    net = create_network(4).with_layer("aff", layer)
+    paths = np.asarray(
+        random_walk(net, jnp.zeros(4000, dtype=jnp.int32), 1, jax.random.PRNGKey(2))
+    )
+    vals, counts = np.unique(paths[:, 1], return_counts=True)
+    freq = dict(zip(vals.tolist(), (counts / counts.sum()).tolist()))
+    # neighbors 1,2,3 equally likely; self mass = (1/k)^2 = 1/16 (one
+    # resample round, documented in LayerTwoMode.sample_neighbor)
+    neigh = [freq[v] for v in (1, 2, 3)]
+    assert max(neigh) - min(neigh) < 0.05
+    assert abs(freq.get(0, 0.0) - 1 / 16) < 0.03
+
+
+def test_multilayer_walk_layer_weights():
+    net = _line_net().with_layer(
+        "selfloops", one_mode_from_edges(5, [], [], directed=False)
+    )
+    # weight 1.0 on the line layer, 0 on empty layer -> normal line walk
+    paths = np.asarray(
+        random_walk(
+            net, jnp.zeros(8, dtype=jnp.int32), 10, jax.random.PRNGKey(0),
+            layer_weights=[1.0, 1e-9],
+        )
+    )
+    assert (paths[:, -1] > 0).any()
+
+
+def test_neighborhood_sample_shapes():
+    net = _line_net()
+    hops = neighborhood_sample(
+        net, jnp.array([0, 1]), fanout=[3, 2], key=jax.random.PRNGKey(0)
+    )
+    assert hops[0].shape == (6,)
+    assert hops[1].shape == (12,)
+
+
+def test_binary_roundtrip(tmp_path, small_mixed_network):
+    net = small_mixed_network
+    from repro.core import create_nodeset
+    from repro.core.network import Network
+
+    ns = create_nodeset(net.n_nodes).set_attr(
+        "year", "int", [1, 2], [1990, 1991]
+    )
+    net = Network(nodeset=ns, layers=net.layers, layer_names=net.layer_names)
+
+    p = tmp_path / "net.npz"
+    save_network(net, p)
+    back = load_network(p)
+    assert back.layer_names == net.layer_names
+    assert back.n_nodes == net.n_nodes
+    u = jnp.arange(50)
+    v = jnp.arange(50, 100)
+    for name in net.layer_names:
+        np.testing.assert_allclose(
+            np.asarray(net.edge_value(name, u, v)),
+            np.asarray(back.edge_value(name, u, v)),
+        )
+    val, has = back.nodeset.get_attr("year", jnp.array([1, 2, 3]))
+    np.testing.assert_array_equal(np.asarray(has), [1, 1, 0])
+    assert memory_report(back).total_nbytes == memory_report(net).total_nbytes
+
+
+@pytest.mark.parametrize("gz", [False, True])
+def test_tsv_roundtrip(tmp_path, gz):
+    layer = one_mode_from_edges(
+        6, [0, 1, 2], [1, 2, 5], values=[1.5, 2.5, 3.5], directed=False
+    )
+    net = create_network(6).with_layer("l", layer)
+    p = tmp_path / ("l.tsv.gz" if gz else "l.tsv")
+    export_layer_tsv(net, "l", p)
+    back = import_layer_tsv(p, 6, mode=1, directed=False, valued=True)
+    u = jnp.array([0, 1, 2, 0])
+    v = jnp.array([1, 2, 5, 3])
+    np.testing.assert_allclose(
+        np.asarray(back.edge_value(u, v)), np.asarray(layer.edge_value(u, v))
+    )
+
+
+def test_tsv_two_mode_roundtrip(tmp_path):
+    layer = two_mode_from_memberships(
+        5, 3, np.array([0, 1, 2, 2]), np.array([0, 0, 1, 2])
+    )
+    net = create_network(5).with_layer("aff", layer)
+    p = tmp_path / "aff.tsv"
+    export_layer_tsv(net, "aff", p)
+    back = import_layer_tsv(p, 5, mode=2, n_hyperedges=3)
+    assert back.n_memberships == 4
+    np.testing.assert_array_equal(
+        np.asarray(back.check_edge(jnp.array([0]), jnp.array([1]))), [True]
+    )

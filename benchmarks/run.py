@@ -28,11 +28,13 @@ import jax.numpy as jnp
 SCALE = float(os.environ.get("BENCH_SCALE", "1"))
 N_NODES = int(100_000 * SCALE)
 ROWS: list[str] = []
+RESULTS: dict[str, float] = {}  # bench_name -> us_per_call (BENCH_1.json)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
+    RESULTS[name] = us_per_call
     print(row)
 
 
@@ -121,6 +123,138 @@ def query_perf(net) -> None:
         emit(f"query/{name}", us / B, f"batch={B};us_per_batch={us:.0f}")
 
 
+def build_skewed_two_mode(seed: int = 7):
+    """Skewed affiliation layer: power-law hyperedge sizes + one hub node.
+
+    Hyperedge sizes are Pareto-distributed (a few giant hyperedges); one
+    hub node joins >= 100x the median membership count. This is the
+    workload where global-max padding collapses: ONE hub/giant row sets
+    the pad width for every query in every batch.
+    """
+    from repro.core import two_mode_from_memberships
+
+    rng = np.random.default_rng(seed)
+    n_nodes = max(int(20_000 * SCALE), 2_000)
+    n_hyper = max(n_nodes // 10, 64)
+    sizes = np.clip(
+        (2.0 * (rng.pareto(1.3, n_hyper) + 1.0)).astype(np.int64), 1, 256
+    )
+    nodes = rng.integers(0, n_nodes, int(sizes.sum()))
+    hyper = np.repeat(np.arange(n_hyper), sizes)
+    # hub: node 0 joins 100x the median membership count
+    memb_counts = np.bincount(nodes % n_nodes, minlength=n_nodes)
+    hub_deg = min(int(100 * max(np.median(memb_counts), 1)), n_hyper)
+    hub_h = rng.choice(n_hyper, hub_deg, replace=False)
+    nodes = np.concatenate([nodes, np.zeros(hub_deg, dtype=np.int64)])
+    hyper = np.concatenate([hyper, hub_h])
+    return two_mode_from_memberships(n_nodes, n_hyper, nodes, hyper)
+
+
+def query_perf_skewed() -> None:
+    """Degree-bucketed dispatch vs global-max padding on the skewed layer.
+
+    Emits both paths' latencies plus the speedup; asserts the bucketed
+    results are bit-identical to the padded reference path.
+    """
+    from repro.core import dispatch
+
+    layer = build_skewed_two_mode()
+    rng = np.random.default_rng(1)
+    derived_base = (
+        f"max_memb={layer.max_memberships}"
+        f";max_he={layer.max_hyperedge_size}"
+    )
+
+    # -- edge_value ---------------------------------------------------------
+    B = 4096
+    u = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
+    v = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
+    padded = jax.jit(lambda a, b: layer.edge_value_padded(a, b))
+    us_pad = _timeit(padded, u, v)
+    bucketed = lambda a, b: dispatch.bucketed_edge_value(layer, a, b)
+    us_bkt = _timeit(bucketed, u, v)
+    np.testing.assert_array_equal(
+        np.asarray(bucketed(u, v)), np.asarray(padded(u, v))
+    )
+    emit("skewed/getedge_padded", us_pad / B, f"batch={B};{derived_base}")
+    emit(
+        "skewed/getedge_bucketed", us_bkt / B,
+        f"batch={B};speedup={us_pad / us_bkt:.1f}x;bit_identical=1",
+    )
+
+    # -- node_alters --------------------------------------------------------
+    B = 256
+    max_alters = 512
+    ua = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
+    padded_a = jax.jit(lambda a: layer.node_alters_padded(a, max_alters))
+    us_pad_a = _timeit(padded_a, ua)
+    bucketed_a = lambda a: dispatch.bucketed_node_alters(layer, a, max_alters)
+    us_bkt_a = _timeit(bucketed_a, ua)
+    pv, pm = padded_a(ua)
+    bv, bm = bucketed_a(ua)
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(pm))
+    emit(
+        "skewed/getnodealters_padded", us_pad_a / B,
+        f"batch={B};max_alters={max_alters};{derived_base}",
+    )
+    emit(
+        "skewed/getnodealters_bucketed", us_bkt_a / B,
+        f"batch={B};speedup={us_pad_a / us_bkt_a:.1f}x;bit_identical=1",
+    )
+
+
+def kernel_intersect_skewed() -> None:
+    """Row-set intersection under power-law row lengths.
+
+    Global-max padding runs every row at the longest row's width; the
+    bucketed plan (core/dispatch.plan_buckets) groups rows by length and
+    runs each group at its own width. Rows are sorted with SENTINEL pads,
+    so narrowing a short row is a plain slice.
+    """
+    from repro.core.csr import SENTINEL
+    from repro.core.dispatch import plan_buckets
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(3)
+    B = 8192
+    lens = np.clip((3 * (rng.pareto(1.3, B) + 1)).astype(np.int64), 1, 512)
+    lens[0] = 512  # one hub row pins the global width
+    K = int(lens.max())
+    a = np.full((B, K), SENTINEL, np.int32)
+    b = np.full((B, K), SENTINEL, np.int32)
+    for rows in (a, b):
+        for i in range(B):
+            rows[i, : lens[i]] = np.sort(
+                rng.choice(100_000, lens[i], replace=False)
+            )
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+    full = jax.jit(lambda x, y: ref.intersect_count_ref(x, y))
+    us_full = _timeit(full, aj, bj)
+
+    buckets = plan_buckets(lens, K)
+    narrow = jax.jit(lambda x, y: ref.intersect_count_ref(x, y))
+
+    def bucketed(x, y):
+        out = jnp.zeros((B,), jnp.int32)
+        for idx, w in buckets:
+            ij = jnp.asarray(idx)
+            out = out.at[ij].set(narrow(x[ij][:, :w], y[ij][:, :w]))
+        return out
+
+    us_bkt = _timeit(bucketed, aj, bj)
+    np.testing.assert_array_equal(
+        np.asarray(bucketed(aj, bj)), np.asarray(full(aj, bj))
+    )
+    emit("kernel/intersect_skewed_globalpad", us_full / B, f"batch={B};K={K}")
+    emit(
+        "kernel/intersect_skewed_bucketed", us_bkt / B,
+        f"batch={B};buckets={len(buckets)}"
+        f";speedup={us_full / us_bkt:.1f}x;bit_identical=1",
+    )
+
+
 def shortest_path(net) -> None:
     from repro.core import shortest_path_length
 
@@ -179,18 +313,31 @@ def roofline() -> None:
         print(row)
 
 
+def write_bench_json(path: str | None = None) -> str:
+    """Machine-readable {bench_name: us_per_call} for cross-PR tracking."""
+    import json
+    from pathlib import Path
+
+    out = Path(path) if path else Path(__file__).parent / "BENCH_1.json"
+    out.write_text(json.dumps(RESULTS, indent=2, sort_keys=True) + "\n")
+    return str(out)
+
+
 def main() -> None:
     print(f"# benchmark network: {N_NODES:,} nodes (BENCH_SCALE={SCALE})")
     net = build_benchmark_network()
     table1_memory(net)
     query_perf(net)
+    query_perf_skewed()
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
+    kernel_intersect_skewed()
     try:
         roofline()
     except Exception as e:  # artifacts may not exist yet
         print(f"# roofline skipped: {e}")
+    print(f"# wrote {write_bench_json()}")
 
 
 if __name__ == "__main__":

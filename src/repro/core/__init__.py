@@ -26,7 +26,14 @@ from .analysis import (
     connected_components,
     degree_centrality,
     density,
+    projected_degree,
     shortest_path_length,
+)
+from .dispatch import (
+    bucketed_check_edge,
+    bucketed_edge_value,
+    bucketed_node_alters,
+    plan_buckets,
 )
 from .processing import dichotomize, filter_edges, subgraph_layer, symmetrize
 from .projection import project_two_mode, projection_nbytes
@@ -42,7 +49,9 @@ __all__ = [
     "AttributeStore", "Nodeset", "create_nodeset",
     "barabasi_albert", "erdos_renyi", "random_two_mode", "watts_strogatz",
     "bfs_distances", "connected_components", "degree_centrality",
-    "density", "shortest_path_length",
+    "density", "projected_degree", "shortest_path_length",
+    "bucketed_check_edge", "bucketed_edge_value", "bucketed_node_alters",
+    "plan_buckets",
     "dichotomize", "filter_edges", "subgraph_layer", "symmetrize",
     "project_two_mode", "projection_nbytes",
     "ego_sample", "neighborhood_sample", "random_walk",

@@ -27,6 +27,7 @@ from .network import Network
 
 __all__ = [
     "degree_centrality",
+    "projected_degree",
     "density",
     "attribute_summary",
     "bfs_distances",
@@ -48,6 +49,32 @@ def degree_centrality(net: Network, layer_names: Sequence[str] | None = None):
     for layer in net._select(layer_names):
         total = total + layer.degrees().astype(jnp.int32)
     return total
+
+
+def projected_degree(
+    net: Network,
+    u: jnp.ndarray,
+    layer_names: Sequence[str] | None = None,
+    max_alters: int | None = None,
+) -> jnp.ndarray:
+    """Exact *projected* degree per query node -> int32[B].
+
+    Counts distinct alters across the selected layers — for two-mode layers
+    this is the degree in the never-materialized projection (≠ membership
+    count). Concrete query batches run through the degree-bucketed
+    dispatcher (core/dispatch.py), so hub queries don't inflate the batch.
+    ``max_alters`` caps the per-node count; the default is exact — a tight
+    host-side bound on the batch's largest possible alter set
+    (dispatch.alters_bound), falling back to n_nodes under tracing.
+    """
+    from . import dispatch
+
+    if max_alters is None:
+        max_alters = dispatch.alters_bound(
+            net._select(layer_names), u, net.n_nodes
+        )
+    _, mask = net.node_alters(u, max_alters, layer_names)
+    return jnp.sum(mask, axis=-1).astype(jnp.int32)
 
 
 def density(layer) -> float:

@@ -27,6 +27,11 @@ from .pytree import pytree_dataclass
 SENTINEL = np.int32(2**31 - 1)
 
 
+def on_tpu() -> bool:
+    """Backend check shared by kernel wrappers and the query dispatcher."""
+    return jax.default_backend() == "tpu"
+
+
 @pytree_dataclass(static=("n_rows", "n_cols"))
 class CSR:
     indptr: jnp.ndarray  # int32[n_rows + 1]

@@ -1,0 +1,347 @@
+"""Degree-bucketed batched query dispatch for pseudo-projection hot paths.
+
+Problem (NetworKit/SNAP's lesson, applied to the query engine): batched
+two-mode queries pad every row to the *layer-global* maximum —
+``max_memberships`` for ``edge_value`` and ``max_memberships ×
+max_hyperedge_size`` for ``node_alters``. Real-world affiliation graphs
+are heavily skewed, so a single hub node or giant hyperedge inflates every
+query in every batch by orders of magnitude.
+
+Mechanism: when a query batch is *concrete* (host-visible ids — the
+serving path; anything inside a caller's ``jit`` trace falls back to the
+global-max padded path), the dispatcher
+
+  1. reads row degrees straight from the CSR ``indptr`` on the host,
+  2. splits the batch into power-of-two padding buckets
+     (``DEFAULT_BUCKET_WIDTHS`` then the layer max),
+  3. pads each bucket's row count to a power of two (so each
+     (rows, width) pair compiles exactly once),
+  4. runs each bucket through a jit'd fixed-width kernel — the Pallas
+     intersect / segmented-union kernels for wide buckets on TPU, the jnp
+     ``sorted_isin`` / ``padded_unique`` paths for tiny buckets and CPU —
+  5. scatters per-bucket results back into the original batch order.
+
+For ``node_alters`` the second-hop width is also bucket-local: the max
+hyperedge size *among the bucket's actual hyperedges* (cached per layer),
+not the global ``max_hyperedge_size`` — this is what neutralizes giant
+hyperedges for the 99% of queries that never touch them.
+
+Bucketed results are bit-identical to the padded reference paths: every
+row's data fits its bucket width, and both dedup paths emit the same
+sorted-unique, smallest-first, ``max_alters``-capped rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .csr import CSR, SENTINEL, on_tpu as _on_tpu, sorted_isin
+
+__all__ = [
+    "DEFAULT_BUCKET_WIDTHS",
+    "can_dispatch",
+    "plan_buckets",
+    "bucketed_edge_value",
+    "bucketed_check_edge",
+    "bucketed_node_alters",
+    "alters_bound",
+    "union_rows",
+    "node_max_hyperedge_size",
+]
+
+# Bucket pad widths tried in order; the layer-global max closes the list.
+DEFAULT_BUCKET_WIDTHS = (8, 32, 128)
+# Below this membership width the Pallas intersect kernel would pad back up
+# to a full 128-lane tile — tiny buckets stay on the jnp binary-search path.
+PALLAS_MIN_WIDTH = 128
+# All-pairs dedup is O(K^2); beyond this flat width the sort path wins.
+UNION_PALLAS_MAX_FLAT = 2048
+
+
+def can_dispatch(*arrays) -> bool:
+    """True when every array is concrete (not inside a jit trace).
+
+    Callers must pass the layer's own buffers (indptr/indices) along with
+    the query ids: a layer flowing through jit as a pytree argument is
+    traced even when the queries are host arrays.
+    """
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# Host-side planning
+# ---------------------------------------------------------------------------
+
+
+def _host_degrees(csr: CSR, rows: np.ndarray) -> np.ndarray:
+    """Row lengths read straight from indptr (mirrors the device clip)."""
+    indptr = np.asarray(csr.indptr)
+    rows = np.clip(rows.astype(np.int64), 0, max(csr.n_rows - 1, 0))
+    return (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+
+
+def _width_ladder(max_width: int, widths) -> list[int]:
+    max_width = max(int(max_width), 1)
+    return [w for w in widths if w < max_width] + [max_width]
+
+
+def plan_buckets(
+    deg: np.ndarray,
+    max_width: int,
+    widths=DEFAULT_BUCKET_WIDTHS,
+) -> list[tuple[np.ndarray, int]]:
+    """Assign each query the smallest bucket width covering its degree.
+
+    Returns [(original_positions, pad_width)] for each non-empty bucket,
+    ascending by width. Degree-0 rows land in the smallest bucket.
+    """
+    ladder = _width_ladder(max_width, widths)
+    assign = np.searchsorted(np.asarray(ladder), deg, side="left")
+    out = []
+    for bi, w in enumerate(ladder):
+        idx = np.nonzero(assign == bi)[0]
+        if idx.size:
+            out.append((idx, int(w)))
+    return out
+
+
+def _pow2_rows(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _pad_rows(ids: np.ndarray, n: int) -> jnp.ndarray:
+    out = np.zeros((n,), dtype=np.int32)
+    out[: ids.size] = ids
+    return jnp.asarray(out)
+
+
+# Per-layer cache: node -> max hyperedge size over its memberships.
+# Keyed by id() of the membership indices buffer; the buffer itself is
+# pinned in the value so a recycled id can be detected by identity check.
+_NODE_WIDTH_CACHE: dict[int, tuple[object, np.ndarray]] = {}
+
+
+def node_max_hyperedge_size(layer) -> np.ndarray:
+    """int64[n_nodes]: largest hyperedge each node belongs to (host, cached).
+
+    This bounds the second-hop gather width for ``node_alters`` per query
+    node, replacing the layer-global ``max_hyperedge_size``.
+    """
+    key = id(layer.memb.indices)
+    hit = _NODE_WIDTH_CACHE.get(key)
+    if hit is not None and hit[0] is layer.memb.indices:
+        return hit[1]
+    indptr = np.asarray(layer.memb.indptr)
+    indices = np.asarray(layer.memb.indices)
+    he_sizes = np.diff(np.asarray(layer.members.indptr)).astype(np.int64)
+    out = np.zeros(layer.memb.n_rows, dtype=np.int64)
+    if indices.size:
+        per_memb = he_sizes[indices]
+        lengths = np.diff(indptr)
+        nonempty = lengths > 0
+        starts = indptr[:-1][nonempty]
+        out[nonempty] = np.maximum.reduceat(per_memb, starts)
+    if len(_NODE_WIDTH_CACHE) > 64:
+        _NODE_WIDTH_CACHE.clear()
+    _NODE_WIDTH_CACHE[key] = (layer.memb.indices, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fixed-width bucket kernels (jit-cached per (layer treedef, widths))
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("width", "use_pallas", "interpret")
+)
+def _edge_value_bucket(layer, u, v, *, width, use_pallas, interpret):
+    a, am = layer.memberships(u, width)
+    b, bm = layer.memberships(v, width)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        a = jnp.where(am, a, SENTINEL)
+        b = jnp.where(bm, b, SENTINEL)
+        return kops.intersect_count(a, b, interpret=interpret).astype(
+            jnp.float32
+        )
+    hits = sorted_isin(a, am, b, bm)
+    return jnp.sum(hits, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "width_m", "width_n", "max_alters", "use_pallas", "interpret"
+    ),
+)
+def _node_alters_bucket(
+    layer, u, *, width_m, width_n, max_alters, use_pallas, interpret
+):
+    from repro.kernels import ops as kops
+
+    return kops.pseudo_node_alters(
+        layer, u, max_alters,
+        width_m=width_m, width_n=width_n,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dispatchers
+# ---------------------------------------------------------------------------
+
+
+def bucketed_edge_value(
+    layer,
+    u: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    widths=DEFAULT_BUCKET_WIDTHS,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Degree-bucketed GetEdgeValue over a concrete query batch -> f32[...].
+
+    Buckets by max(deg(u), deg(v)) so both membership rows fit the bucket
+    width. ``use_pallas=None`` auto-selects: the Pallas intersect kernel on
+    TPU for buckets >= PALLAS_MIN_WIDTH, ``sorted_isin`` otherwise.
+    """
+    shape = jnp.shape(u)
+    un = np.asarray(u, dtype=np.int64).reshape(-1)
+    vn = np.asarray(v, dtype=np.int64).reshape(-1)
+    B = un.size
+    if B == 0:
+        return jnp.zeros(shape, jnp.float32)
+    deg = np.maximum(
+        _host_degrees(layer.memb, un), _host_degrees(layer.memb, vn)
+    )
+    out = jnp.zeros((B,), jnp.float32)
+    for idx, w in plan_buckets(deg, layer.max_memberships, widths):
+        n = _pow2_rows(idx.size)
+        pallas_here = (
+            use_pallas
+            if use_pallas is not None
+            else (_on_tpu() and w >= PALLAS_MIN_WIDTH)
+        )
+        res = _edge_value_bucket(
+            layer, _pad_rows(un[idx], n), _pad_rows(vn[idx], n),
+            width=w, use_pallas=pallas_here, interpret=interpret,
+        )
+        out = out.at[jnp.asarray(idx)].set(res[: idx.size])
+    return out.reshape(shape)
+
+
+def bucketed_check_edge(layer, u, v, **kw) -> jnp.ndarray:
+    return bucketed_edge_value(layer, u, v, **kw) > 0
+
+
+def bucketed_node_alters(
+    layer,
+    u: jnp.ndarray,
+    max_alters: int,
+    *,
+    widths=DEFAULT_BUCKET_WIDTHS,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Degree-bucketed GetNodeAlters -> (int32[..., max_alters], mask).
+
+    First-hop width = membership-degree bucket; second-hop width = the max
+    hyperedge size among the bucket's nodes, rounded up the same width
+    ladder (compile-count bound). Output rows are sorted-unique and capped
+    at ``max_alters`` — bit-identical to the padded reference path.
+    """
+    shape = jnp.shape(u)
+    un = np.asarray(u, dtype=np.int64).reshape(-1)
+    B = un.size
+    if B == 0:
+        return (
+            jnp.full(shape + (max_alters,), SENTINEL, jnp.int32),
+            jnp.zeros(shape + (max_alters,), bool),
+        )
+    deg = _host_degrees(layer.memb, un)
+    per_node_wn = node_max_hyperedge_size(layer)
+    vals = jnp.full((B, max_alters), SENTINEL, jnp.int32)
+    for idx, wm in plan_buckets(deg, layer.max_memberships, widths):
+        needed = int(per_node_wn[np.clip(un[idx], 0, per_node_wn.size - 1)].max())
+        wn = next(
+            w
+            for w in _width_ladder(layer.max_hyperedge_size, widths)
+            if w >= needed
+        )
+        n = _pow2_rows(idx.size)
+        pallas_here = (
+            use_pallas
+            if use_pallas is not None
+            else (_on_tpu() and wm * wn <= UNION_PALLAS_MAX_FLAT)
+        )
+        va, _ = _node_alters_bucket(
+            layer, _pad_rows(un[idx], n),
+            width_m=wm, width_n=wn, max_alters=max_alters,
+            use_pallas=pallas_here, interpret=interpret,
+        )
+        vals = vals.at[jnp.asarray(idx)].set(va[: idx.size])
+    vals = vals.reshape(shape + (max_alters,))
+    return vals, vals != SENTINEL
+
+
+def alters_bound(layers, u, n_nodes: int) -> int:
+    """Host-side upper bound on distinct alters across ``layers`` for batch u.
+
+    Two-mode layers contribute ≤ deg(u) × (max hyperedge size among u's
+    hyperedges − 1); one-mode layers their out-degree. Falls back to
+    ``n_nodes`` when anything is traced. Used to size exact alter queries
+    (e.g. analysis.projected_degree) without a (B, n_nodes) blowup.
+    """
+    if not can_dispatch(u):
+        return n_nodes
+    un = np.asarray(u, dtype=np.int64).reshape(-1)
+    if un.size == 0:
+        return 1
+    total = np.zeros(un.size, dtype=np.int64)
+    for layer in layers:
+        memb = getattr(layer, "memb", None)
+        csr = memb if memb is not None else layer.out
+        if not can_dispatch(csr.indptr, csr.indices):
+            return n_nodes
+        deg = _host_degrees(csr, un)
+        if memb is not None:
+            wn = node_max_hyperedge_size(layer)
+            wn_u = wn[np.clip(un, 0, wn.size - 1)]
+            total += deg * np.maximum(wn_u - 1, 0)
+        else:
+            total += deg
+    return int(np.clip(total.max(), 1, n_nodes))
+
+
+def union_rows(
+    vals: jnp.ndarray,
+    valid: jnp.ndarray,
+    max_out: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted-unique rows capped at ``max_out`` (multilayer alters merge).
+
+    jit-compatible either way; ``use_pallas=None`` picks the segmented-union
+    kernel on TPU for rows narrow enough for all-pairs dedup, else the
+    ``padded_unique`` sort path.
+    """
+    from repro.kernels import ops as kops
+
+    flat = jnp.where(valid, vals, SENTINEL)
+    if use_pallas is None:
+        use_pallas = _on_tpu() and flat.shape[-1] <= UNION_PALLAS_MAX_FLAT
+    return kops.segmented_union(
+        flat, max_out, use_pallas=use_pallas, interpret=interpret
+    )

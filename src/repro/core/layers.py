@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
 from .pytree import pytree_dataclass, replace
 from .csr import (
     CSR,
@@ -36,7 +37,6 @@ from .csr import (
     csr_row_sample,
     csr_transpose,
     csr_value_at,
-    padded_unique,
     sorted_isin,
 )
 
@@ -230,7 +230,20 @@ class LayerTwoMode:
         return self.edge_value(u, v) > 0
 
     def edge_value(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-        """Pseudo-projected edge value: number of shared hyperedges (f32[B])."""
+        """Pseudo-projected edge value: number of shared hyperedges (f32[B]).
+
+        Concrete query batches go through the degree-bucketed dispatcher
+        (core/dispatch.py); traced batches (inside a caller's jit) fall
+        back to the global-max padded path below. Results are identical.
+        """
+        if dispatch.can_dispatch(u, v, self.memb.indptr, self.memb.indices):
+            return dispatch.bucketed_edge_value(self, u, v)
+        return self.edge_value_padded(u, v)
+
+    def edge_value_padded(
+        self, u: jnp.ndarray, v: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Global-max-padded reference path (jit-compatible baseline)."""
         a, am = self.memberships(u)
         b, bm = self.memberships(v)
         hits = sorted_isin(a, am, b, bm)
@@ -241,19 +254,29 @@ class LayerTwoMode:
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Pseudo-projected alters: union of co-members across u's hyperedges.
 
-        Returns (int32[B, max_alters] sorted padded, mask). The union is
-        computed over up to max_memberships × max_hyperedge_size gathered
-        slots then deduped by sort — capped at ``max_alters`` outputs.
+        Returns (int32[B, max_alters] sorted padded, mask). Concrete query
+        batches run degree-bucketed (per-bucket two-hop gather widths +
+        segmented-union dedup); traced batches use the global-max padded
+        gather-cube + sort below. Results are identical.
         """
-        he, he_mask = self.memberships(u)  # (B, Km)
-        mem, mem_mask = csr_row_gather(
-            self.members, jnp.where(he_mask, he, 0), self.max_hyperedge_size
-        )  # (B, Km, Kn)
-        mem_mask = mem_mask & he_mask[..., None]
-        flat = jnp.where(mem_mask, mem, SENTINEL).reshape(u.shape + (-1,))
-        flat = jnp.where(flat == u[..., None], SENTINEL, flat)  # drop ego
-        uniq, uniq_mask = padded_unique(flat, flat != SENTINEL)
-        return uniq[..., :max_alters], uniq_mask[..., :max_alters]
+        if dispatch.can_dispatch(
+            u, self.memb.indptr, self.memb.indices,
+            self.members.indptr, self.members.indices,
+        ):
+            return dispatch.bucketed_node_alters(self, u, max_alters)
+        return self.node_alters_padded(u, max_alters)
+
+    def node_alters_padded(
+        self, u: jnp.ndarray, max_alters: int
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Global-max-padded reference path: the union is computed over
+        max_memberships × max_hyperedge_size gathered slots then deduped
+        by sort — capped at ``max_alters`` outputs. Delegates to the one
+        shared gather/union implementation (kernels/ops.py) so the
+        bucketed-vs-padded parity contract has a single source of truth."""
+        from repro.kernels import ops as kops
+
+        return kops.pseudo_node_alters(self, u, max_alters, use_pallas=False)
 
     def sample_neighbor(
         self, u: jnp.ndarray, key: jax.Array

@@ -20,8 +20,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
 from .pytree import pytree_dataclass
-from .csr import SENTINEL, padded_unique
+from .csr import SENTINEL
 from .layers import LayerOneMode, LayerTwoMode
 from .nodeset import Nodeset, create_nodeset
 
@@ -113,7 +114,9 @@ class Network:
         """Union of alters across selected layers (mixed modes welcome).
 
         Returns (int32[B, max_alters] sorted padded, mask). Two-mode layers
-        contribute pseudo-projected alters.
+        contribute pseudo-projected alters; concrete query batches run
+        degree-bucketed per layer (core/dispatch.py) and the cross-layer
+        merge goes through the segmented-union dispatch rule.
         """
         u = _as_batch(u)
         parts, masks = [], []
@@ -123,8 +126,7 @@ class Network:
             masks.append(m)
         vals = jnp.concatenate(parts, axis=-1)
         mask = jnp.concatenate(masks, axis=-1)
-        uniq, uniq_mask = padded_unique(vals, mask)
-        return uniq[..., :max_alters], uniq_mask[..., :max_alters]
+        return dispatch.union_rows(vals, mask, max_alters)
 
     def degree(
         self, u: jnp.ndarray, layer_names: Sequence[str] | None = None

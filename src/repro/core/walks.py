@@ -28,6 +28,19 @@ from .network import Network
 __all__ = ["random_walk", "ego_sample", "neighborhood_sample"]
 
 
+def _layer_logits(
+    n_layers: int, layer_weights: Sequence[float] | None
+) -> jnp.ndarray:
+    """Normalized log-probs for the per-walker layer choice (computed once,
+    outside any scan body — honored by random_walk AND neighborhood_sample)."""
+    if layer_weights is None:
+        probs = jnp.full((n_layers,), 1.0 / n_layers)
+    else:
+        w = jnp.asarray(layer_weights, dtype=jnp.float32)
+        probs = w / jnp.sum(w)
+    return jnp.log(probs)
+
+
 def random_walk(
     net: Network,
     start_nodes: jnp.ndarray,
@@ -41,11 +54,7 @@ def random_walk(
     Walkers with no valid move stay in place (dangling nodes).
     """
     layers = net._select(layer_names)
-    if layer_weights is None:
-        probs = jnp.full((len(layers),), 1.0 / len(layers))
-    else:
-        w = jnp.asarray(layer_weights, dtype=jnp.float32)
-        probs = w / jnp.sum(w)
+    logits = _layer_logits(len(layers), layer_weights)
 
     step_fns = [
         lambda u, k, layer=layer: layer.sample_neighbor(u, k)[0]
@@ -60,8 +69,9 @@ def random_walk(
         if len(layers) == 1:
             v = step_fns[0](u, k_step)
         else:
+            # logits precomputed outside the scan body (hoisted log)
             choice = jax.random.categorical(
-                k_layer, jnp.log(probs), shape=u.shape
+                k_layer, logits, shape=u.shape
             )
             # lax.switch needs a scalar branch index; walkers choose layers
             # independently, so evaluate each layer's step and select.
@@ -94,24 +104,60 @@ def neighborhood_sample(
     fanout: Sequence[int],
     key: jax.Array,
     layer_names: Sequence[str] | None = None,
+    layer_weights: Sequence[float] | None = None,
+    method: str = "walk",
+    max_alters_per_hop: int = 64,
 ) -> list[jnp.ndarray]:
     """GraphSAGE-style multi-hop neighbor sampling with per-hop fanout.
 
     Returns a list of int32 arrays, hop i shaped (B, fanout[0]*...*fanout[i]).
-    Sampling uses the pseudo-projected O(1) step on two-mode layers.
+
+    ``method="walk"`` (default): the pseudo-projected O(1) step per draw —
+    two-mode draws are weighted ∝ Σ_{shared h} 1/k_h. Layer choice honors
+    ``layer_weights`` (same normalized logits as ``random_walk``).
+
+    ``method="alters"``: each hop gathers the multilayer alter set
+    (degree-bucketed dispatch on concrete frontiers — core/dispatch.py)
+    and draws fanout samples uniformly from it. The set is capped at
+    ``max_alters_per_hop`` *smallest-id* alters, so sampling is uniform
+    over the full neighborhood only when the cap covers the largest
+    projected degree in the frontier — raise it for hub-heavy graphs.
+    ``layer_weights`` does not apply (the alter set is a cross-layer union).
     """
+    if method not in ("walk", "alters"):
+        raise ValueError(f"unknown method {method!r}; use 'walk' or 'alters'")
     layers = net._select(layer_names)
+    logits = _layer_logits(len(layers), layer_weights)
     frontier = jnp.asarray(seeds, dtype=jnp.int32)
     hops = []
     for f in fanout:
         key, k_layer, k_step = jax.random.split(key, 3)
+        if method == "alters":
+            alters, amask = net.node_alters(
+                frontier, max_alters_per_hop, layer_names
+            )
+            counts = jnp.sum(amask, axis=-1)
+            r = jax.random.randint(
+                k_step, frontier.shape + (f,), 0,
+                jnp.maximum(counts, 1)[..., None],
+            )
+            picked = jnp.take_along_axis(alters, r, axis=-1)
+            picked = jnp.where(  # dangling frontier nodes stay in place
+                counts[..., None] > 0, picked, frontier[..., None]
+            )
+            nxt = picked.reshape(
+                frontier.shape[:-1] + (frontier.shape[-1] * f,)
+            ).astype(jnp.int32)
+            hops.append(nxt)
+            frontier = nxt
+            continue
         flat = jnp.repeat(frontier, f, axis=-1)  # (B * prod(fanout so far))
         if len(layers) == 1:
             nxt = layers[0].sample_neighbor(flat, k_step)[0]
         else:
             choice = jax.random.categorical(
                 k_layer,
-                jnp.zeros((len(layers),)),
+                logits,
                 shape=flat.shape,
             )
             keys = jax.random.split(k_step, len(layers))

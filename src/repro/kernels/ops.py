@@ -15,16 +15,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csr import SENTINEL
+from repro.core.csr import SENTINEL, csr_row_gather, on_tpu as _on_tpu
 from . import ref
 from .intersect import intersect_count_kernel
+from .segmented_union import segmented_union_kernel
 from .flash_attention import flash_attention_kernel
 from .rmsnorm import rmsnorm_kernel
 from .ssd_scan import ssd_scan_kernel
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, fill) -> jnp.ndarray:
@@ -77,6 +74,72 @@ def pseudo_edge_value(
     return intersect_count(
         a, b, use_pallas=use_pallas, interpret=interpret
     ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# segmented union (pseudo-projection GetNodeAlters hot path)
+# ---------------------------------------------------------------------------
+
+
+def segmented_union(
+    flat: jnp.ndarray,
+    max_out: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dedup + sort + compact SENTINEL-padded rows -> (int32[B, max_out], mask).
+
+    Pallas path: all-pairs first-occurrence + rank kernel, then a single
+    scatter places each unique value at its sorted position (no sort).
+    Fallback: the padded_unique double-sort. Both cap at ``max_out``
+    smallest unique values — bit-identical outputs.
+    """
+    if not use_pallas:
+        return ref.segmented_union_ref(flat, max_out)
+    if interpret is None:
+        interpret = not _on_tpu()
+    batch_shape = flat.shape[:-1]
+    f2 = flat.reshape((-1, flat.shape[-1]))
+    B = f2.shape[0]
+    fp = _pad_to(_pad_to(f2, 1, 128, SENTINEL), 0, 8, SENTINEL)
+    kept, rank = segmented_union_kernel(fp, interpret=interpret)
+    keep = (kept > 0) & (rank < max_out)
+    val = jnp.where(keep, fp, SENTINEL)
+    pos = jnp.clip(rank, 0, max_out - 1)
+    out = jnp.full((fp.shape[0], max_out), SENTINEL, jnp.int32)
+    out = out.at[jnp.arange(fp.shape[0])[:, None], pos].min(val)
+    out = out[:B].reshape(batch_shape + (max_out,))
+    return out, out != SENTINEL
+
+
+def pseudo_node_alters(
+    layer,
+    u: jnp.ndarray,
+    max_alters: int,
+    *,
+    width_m: int | None = None,
+    width_n: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Kernel-accelerated LayerTwoMode.node_alters (GetNodeAlters).
+
+    ``width_m`` / ``width_n`` override the two-hop gather pad widths
+    (membership count / hyperedge size); the bucketed dispatcher passes
+    per-bucket widths, None means the layer-global maxima.
+    """
+    he, he_mask = layer.memberships(u, width_m)
+    wn = layer.max_hyperedge_size if width_n is None else max(width_n, 1)
+    mem, mem_mask = csr_row_gather(
+        layer.members, jnp.where(he_mask, he, 0), wn
+    )
+    mem_mask = mem_mask & he_mask[..., None]
+    flat = jnp.where(mem_mask, mem, SENTINEL).reshape(u.shape + (-1,))
+    flat = jnp.where(flat == u[..., None], SENTINEL, flat)  # drop ego
+    return segmented_union(
+        flat, max_alters, use_pallas=use_pallas, interpret=interpret
+    )
 
 
 # ---------------------------------------------------------------------------

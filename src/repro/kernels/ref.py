@@ -22,6 +22,26 @@ def intersect_count_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(eq, axis=(1, 2)).astype(jnp.int32)
 
 
+def segmented_union_ref(
+    flat: jnp.ndarray, max_out: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dedup of SENTINEL-padded rows, capped at ``max_out``.
+
+    flat: int32[..., K] (unsorted, duplicates allowed) ->
+    (int32[..., max_out] sorted unique SENTINEL-padded, mask). The oracle
+    for the segmented-union kernel; identical to the engine's
+    ``padded_unique`` + slice path.
+    """
+    from repro.core.csr import padded_unique
+
+    uniq, mask = padded_unique(flat, flat != SENTINEL)
+    if uniq.shape[-1] < max_out:
+        pad = [(0, 0)] * (uniq.ndim - 1) + [(0, max_out - uniq.shape[-1])]
+        uniq = jnp.pad(uniq, pad, constant_values=SENTINEL)
+        mask = jnp.pad(mask, pad, constant_values=False)
+    return uniq[..., :max_out], mask[..., :max_out]
+
+
 def attention_ref(
     q: jnp.ndarray,  # (BH, S, D)
     k: jnp.ndarray,  # (BHkv, S, D)

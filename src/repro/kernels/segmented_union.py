@@ -1,0 +1,128 @@
+"""Pallas kernel: segmented union (dedup + rank) of padded id rows.
+
+This is the pseudo-projection ``GetNodeAlters`` inner loop: after the
+two-hop gather (node -> hyperedges -> co-members) each query row holds up
+to Km*Kn candidate alters with duplicates (nodes sharing several
+hyperedges with the ego). The jnp reference dedups by sorting the row
+TWICE (``padded_unique``); sorts are lane-serial on the VPU and their cost
+is set by the *global* padded width.
+
+TPU adaptation: for bucketed widths (core/dispatch.py) the row is small
+enough that **all-pairs compares** beat sorting, exactly like the
+intersect kernel. Two O(K^2/block) passes over a resident row:
+
+  pass 1  kept[i]  = valid[i] & no j<i with row[j] == row[i]   (first occurrence)
+  pass 2  rank[i]  = #{ j : kept[j] & row[j] < row[i] }        (rank among uniques)
+
+``kept``/``rank`` let the caller place each unique value directly at its
+sorted position with one scatter — no sort at all. Grid is (B/block_b,);
+the full row (block_b, K) stays resident and both passes tile the compare
+dimension at ``block_k`` so intermediates are (block_b, block_k, block_k).
+
+VMEM per step: 3 * block_b * K * 4 B for row/kept/rank plus a
+(block_b, block_k, block_k) compare tile — ~0.7 MiB at block_b=8,
+K=2048, block_k=128, far under budget. Padding is SENTINEL on the input;
+SENTINEL slots are never kept and never compare less-than a real value.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.csr import SENTINEL
+
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_K = 128
+
+
+def _union_kernel(v_ref, kept_ref, rank_ref, *, block_k: int):
+    bb, K = v_ref.shape
+    nt = K // block_k
+    row = v_ref[...]  # (bb, K) int32, SENTINEL-padded, unsorted
+
+    # tri[t, s] = s < t (strict lower triangle for the diagonal tile)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (block_k, block_k), 1)
+        < jax.lax.broadcasted_iota(jnp.int32, (block_k, block_k), 0)
+    )
+
+    def first_pass(it, _):
+        tile = jax.lax.dynamic_slice(row, (0, it * block_k), (bb, block_k))
+
+        def inner(jt, dup):
+            cmp = jax.lax.dynamic_slice(row, (0, jt * block_k), (bb, block_k))
+            eq = tile[:, :, None] == cmp[:, None, :]  # (bb, bk_t, bk_s)
+            # earlier-index mask: whole tile for jt<it, lower triangle on the
+            # diagonal, nothing for jt>it
+            earlier = jnp.where(jt < it, True, jnp.where(jt == it, tri, False))
+            return dup | jnp.any(eq & earlier[None], axis=2)
+
+        dup = jax.lax.fori_loop(
+            0, nt, inner, jnp.zeros((bb, block_k), dtype=bool)
+        )
+        kept = (tile != SENTINEL) & ~dup
+        kept_ref[:, pl.ds(it * block_k, block_k)] = kept.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, nt, first_pass, 0)
+
+    def second_pass(it, _):
+        tile = jax.lax.dynamic_slice(row, (0, it * block_k), (bb, block_k))
+
+        def inner(jt, acc):
+            cmp = jax.lax.dynamic_slice(row, (0, jt * block_k), (bb, block_k))
+            kcmp = kept_ref[:, pl.ds(jt * block_k, block_k)]
+            lt = (cmp[:, None, :] < tile[:, :, None]) & (kcmp[:, None, :] > 0)
+            return acc + jnp.sum(lt.astype(jnp.int32), axis=2)
+
+        rank = jax.lax.fori_loop(
+            0, nt, inner, jnp.zeros((bb, block_k), jnp.int32)
+        )
+        rank_ref[:, pl.ds(it * block_k, block_k)] = rank
+        return 0
+
+    jax.lax.fori_loop(0, nt, second_pass, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_k", "interpret")
+)
+def segmented_union_kernel(
+    flat: jnp.ndarray,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row first-occurrence mask and unique-value rank.
+
+    flat: int32[B, K] SENTINEL-padded (unsorted); K must be a multiple of
+    block_k and B of block_b (ops.py wrapper pads). Returns
+    (kept int32[B, K] 0/1, rank int32[B, K]); ``rank`` of a kept element is
+    the number of distinct smaller values in the row, i.e. its position in
+    the sorted-unique output.
+    """
+    B, K = flat.shape
+    if B % block_b or K % block_k:
+        raise ValueError(f"unaligned shape {flat.shape}")
+
+    grid = (B // block_b,)
+    kept, rank = pl.pallas_call(
+        functools.partial(_union_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flat)
+    return kept, rank

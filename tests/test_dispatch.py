@@ -1,0 +1,228 @@
+"""Degree-bucketed dispatch parity: bucketed Pallas/jnp query paths must be
+bit-identical to the global-max padded reference paths AND agree with the
+materialized ``project_two_mode`` oracle — including hub nodes, empty rows,
+size-1 hyperedges, and all-sentinel batches."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import project_two_mode, two_mode_from_memberships
+from repro.core import dispatch
+from repro.core.csr import SENTINEL
+from repro.kernels import ops, ref
+
+
+def _skewed_layer(seed=0, n_nodes=300, n_hyper=40):
+    """Hub node 0 (~100x median memberships), one giant hyperedge, several
+    size-1 hyperedges, and isolated nodes (ids >= n_nodes - 20)."""
+    rng = np.random.default_rng(seed)
+    nodes = rng.integers(0, n_nodes - 20, 600)
+    hyper = rng.integers(0, n_hyper, 600)
+    giant = rng.choice(n_nodes - 20, 120, replace=False)  # hyperedge 0
+    singles = rng.integers(0, n_nodes - 20, 5)  # size-1 hyperedges
+    hub_h = rng.choice(n_hyper, 35, replace=False)
+    nodes = np.concatenate([nodes, giant, singles, np.zeros(35, int)])
+    hyper = np.concatenate(
+        [hyper, np.zeros(120, int), np.arange(n_hyper, n_hyper + 5), hub_h]
+    )
+    return two_mode_from_memberships(n_nodes, n_hyper + 5, nodes, hyper)
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    return _skewed_layer()
+
+
+# ---------------------------------------------------------------------------
+# plan_buckets
+# ---------------------------------------------------------------------------
+
+
+def test_plan_buckets_covers_batch_exactly():
+    deg = np.array([0, 1, 8, 9, 32, 33, 128, 500, 2])
+    buckets = dispatch.plan_buckets(deg, 500)
+    seen = np.concatenate([idx for idx, _ in buckets])
+    np.testing.assert_array_equal(np.sort(seen), np.arange(deg.size))
+    for idx, w in buckets:
+        assert (deg[idx] <= w).all(), f"degree exceeds bucket width {w}"
+
+
+def test_plan_buckets_small_max_width():
+    # max_width below every threshold -> single bucket at the max
+    buckets = dispatch.plan_buckets(np.array([0, 1, 2]), 3)
+    assert len(buckets) == 1 and buckets[0][1] == 3
+
+
+# ---------------------------------------------------------------------------
+# edge_value / check_edge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_edge_value_bucketed_vs_padded(skewed, use_pallas):
+    rng = np.random.default_rng(1)
+    B = 257  # not a multiple of any block size
+    u = jnp.asarray(rng.integers(0, skewed.n_nodes, B), jnp.int32)
+    v = jnp.asarray(rng.integers(0, skewed.n_nodes, B), jnp.int32)
+    got = dispatch.bucketed_edge_value(skewed, u, v, use_pallas=use_pallas)
+    want = skewed.edge_value_padded(u, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ce = dispatch.bucketed_check_edge(skewed, u, v, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(ce), np.asarray(want) > 0)
+
+
+def test_edge_value_vs_projection_oracle(skewed):
+    proj = project_two_mode(skewed)
+    rng = np.random.default_rng(2)
+    u = rng.integers(0, skewed.n_nodes, 400)
+    v = rng.integers(0, skewed.n_nodes, 400)
+    off = u != v  # projection has no self-loops
+    got = np.asarray(skewed.edge_value(jnp.asarray(u), jnp.asarray(v)))
+    want = np.asarray(proj.edge_value(jnp.asarray(u), jnp.asarray(v)))
+    np.testing.assert_allclose(got[off], want[off])
+
+
+def test_edge_value_hub_and_empty_rows(skewed):
+    # hub (node 0), isolated nodes (no memberships), and hub-vs-isolated
+    iso = skewed.n_nodes - 1
+    u = jnp.asarray([0, iso, 0, iso], jnp.int32)
+    v = jnp.asarray([1, 5, iso, iso], jnp.int32)
+    got = dispatch.bucketed_edge_value(skewed, u, v)
+    want = skewed.edge_value_padded(u, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(got[1]) == 0.0 and float(got[3]) == 0.0
+
+
+def test_edge_value_all_sentinel_batch(skewed):
+    # every query hits an isolated node -> every bucket row is all-SENTINEL
+    iso = jnp.full((9,), skewed.n_nodes - 1, jnp.int32)
+    got = dispatch.bucketed_edge_value(skewed, iso, iso)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(9, np.float32))
+
+
+def test_edge_value_traced_fallback_matches(skewed):
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.integers(0, skewed.n_nodes, 64), jnp.int32)
+    v = jnp.asarray(rng.integers(0, skewed.n_nodes, 64), jnp.int32)
+    jit_val = jax.jit(lambda a, b: skewed.edge_value(a, b))(u, v)
+    np.testing.assert_array_equal(
+        np.asarray(skewed.edge_value(u, v)), np.asarray(jit_val)
+    )
+
+
+def test_empty_batch(skewed):
+    got = dispatch.bucketed_edge_value(
+        skewed, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32)
+    )
+    assert got.shape == (0,)
+    va, ma = dispatch.bucketed_node_alters(
+        skewed, jnp.zeros((0,), jnp.int32), 8
+    )
+    assert va.shape == (0, 8) and ma.shape == (0, 8)
+
+
+# ---------------------------------------------------------------------------
+# node_alters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_node_alters_bucketed_vs_padded(skewed, use_pallas):
+    rng = np.random.default_rng(4)
+    B, max_alters = 100, 256
+    u = jnp.asarray(rng.integers(0, skewed.n_nodes, B), jnp.int32)
+    gv, gm = dispatch.bucketed_node_alters(
+        skewed, u, max_alters, use_pallas=use_pallas
+    )
+    wv, wm = skewed.node_alters_padded(u, max_alters)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+
+
+def test_node_alters_vs_projection_oracle(skewed):
+    proj = project_two_mode(skewed)
+    q = jnp.arange(0, skewed.n_nodes, 7)
+    max_alters = skewed.n_nodes
+    pv, pm = skewed.node_alters(q, max_alters)  # dispatched (concrete)
+    mv, mm = proj.node_alters(q, max_alters)
+    for i in range(q.shape[0]):
+        got = set(np.asarray(pv[i])[np.asarray(pm[i])].tolist())
+        want = set(np.asarray(mv[i])[np.asarray(mm[i])].tolist())
+        assert got == want, f"alters mismatch for node {int(q[i])}"
+
+
+def test_node_alters_hub_empty_and_singleton(skewed):
+    iso = skewed.n_nodes - 1
+    # a member of a size-1 hyperedge only has alters from its other edges;
+    # find one: hyperedge ids n_hyper-5.. are size-1
+    u = jnp.asarray([0, iso], jnp.int32)  # hub + isolated
+    gv, gm = dispatch.bucketed_node_alters(skewed, u, 300)
+    wv, wm = skewed.node_alters_padded(u, 300)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    assert not np.asarray(gm[1]).any()  # isolated node: no alters
+
+
+def test_node_alters_all_sentinel_batch(skewed):
+    iso = jnp.full((17,), skewed.n_nodes - 1, jnp.int32)
+    gv, gm = dispatch.bucketed_node_alters(skewed, iso, 32)
+    assert not np.asarray(gm).any()
+    assert (np.asarray(gv) == SENTINEL).all()
+
+
+def test_size_one_hyperedges_only():
+    # layer where EVERY hyperedge has one member: projection is empty
+    layer = two_mode_from_memberships(
+        10, 6, np.arange(6), np.arange(6)
+    )
+    u = jnp.arange(10)
+    ev = dispatch.bucketed_edge_value(layer, u, u[::-1])
+    np.testing.assert_array_equal(np.asarray(ev), np.zeros(10))
+    gv, gm = dispatch.bucketed_node_alters(layer, u, 4)
+    assert not np.asarray(gm).any()
+
+
+# ---------------------------------------------------------------------------
+# segmented-union kernel
+# ---------------------------------------------------------------------------
+
+
+def test_segmented_union_kernel_vs_ref():
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        B = int(rng.integers(1, 12))
+        K = int(rng.integers(1, 260))
+        flat = rng.integers(0, 40, (B, K)).astype(np.int32)
+        flat[rng.random((B, K)) < 0.3] = SENTINEL
+        max_out = int(rng.integers(1, K + 4))
+        fj = jnp.asarray(flat)
+        gv, gm = ops.segmented_union(fj, max_out, use_pallas=True)
+        wv, wm = ref.segmented_union_ref(fj, max_out)
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+
+
+def test_pseudo_node_alters_widths(skewed):
+    """Narrow per-bucket widths must not change results when they cover
+    the queried rows (the dispatcher's core invariant)."""
+    u = jnp.asarray([3, 4, 5], jnp.int32)
+    deg = np.asarray(skewed.memb.degrees())[np.asarray(u)]
+    wn = int(dispatch.node_max_hyperedge_size(skewed)[np.asarray(u)].max())
+    gv, gm = ops.pseudo_node_alters(
+        skewed, u, 128, width_m=int(deg.max()), width_n=wn, use_pallas=False
+    )
+    wv, wm = skewed.node_alters_padded(u, 128)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+
+
+def test_node_max_hyperedge_size(skewed):
+    per_node = dispatch.node_max_hyperedge_size(skewed)
+    indptr = np.asarray(skewed.memb.indptr)
+    indices = np.asarray(skewed.memb.indices)
+    sizes = np.diff(np.asarray(skewed.members.indptr))
+    for u in [0, 1, 7, skewed.n_nodes - 1]:
+        hes = indices[indptr[u] : indptr[u + 1]]
+        want = int(sizes[hes].max()) if hes.size else 0
+        assert per_node[u] == want

@@ -7,6 +7,7 @@ node_alters (GetNodeAlters) — on arbitrary bipartite graphs.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import project_two_mode, two_mode_from_memberships

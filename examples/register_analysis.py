@@ -61,3 +61,23 @@ print(f"walker-sampled income estimate: mean={inc.mean():,.0f} "
 base_inc = np.asarray(net.nodeset.attrs.column("income").values)
 print(f"population income mean:        {base_inc.mean():,.0f} "
       "(walk-stationary distribution up-weights high-degree nodes)")
+
+# -- attribute-filtered pseudo-projection queries (ISSUE 2) ----------------
+# "alters of node u in the Workplaces layer where income > 50k" — filter
+# pushed inside the degree-bucketed dispatch; no projection materialized.
+rich = net.nodeset.select("income", ">", 50_000) & \
+    net.nodeset.select("employed", "==", True)
+print(f"\nselection: {rich}")
+colleagues, cmask = net.node_alters(
+    egos, 128, ["Workplaces"], node_filter=rich
+)
+print(f"rich employed colleagues per ego: "
+      f"mean={np.asarray(cmask.sum(axis=1)).mean():.2f}")
+fdeg = net.degree(egos, node_filter=rich)
+print(f"filtered multilayer degree (first 5 egos): "
+      f"{np.asarray(fdeg[:5]).tolist()}")
+
+from repro.core import induced_subnetwork
+sub = induced_subnetwork(net, rich)
+print(f"induced subnetwork: {sub.n_nodes:,} nodes, "
+      f"layers={list(sub.layer_names)}")

@@ -14,7 +14,13 @@ from .layers import (
     two_mode_from_memberships,
 )
 from .network import Network, create_network
-from .nodeset import AttributeStore, Nodeset, create_nodeset
+from .nodeset import (
+    AttributeStore,
+    NodeSelection,
+    Nodeset,
+    create_nodeset,
+    node_filter_mask,
+)
 from .generators import (
     barabasi_albert,
     erdos_renyi,
@@ -25,6 +31,7 @@ from .analysis import (
     bfs_distances,
     connected_components,
     degree_centrality,
+    degree_distribution,
     density,
     projected_degree,
     shortest_path_length,
@@ -32,10 +39,17 @@ from .analysis import (
 from .dispatch import (
     bucketed_check_edge,
     bucketed_edge_value,
+    bucketed_filtered_degree,
     bucketed_node_alters,
     plan_buckets,
 )
-from .processing import dichotomize, filter_edges, subgraph_layer, symmetrize
+from .processing import (
+    dichotomize,
+    filter_edges,
+    induced_subnetwork,
+    subgraph_layer,
+    symmetrize,
+)
 from .projection import project_two_mode, projection_nbytes
 from .walks import ego_sample, neighborhood_sample, random_walk
 from .memory import memory_report
@@ -46,13 +60,16 @@ __all__ = [
     "LayerOneMode", "LayerTwoMode",
     "one_mode_from_edges", "two_mode_from_memberships",
     "Network", "create_network",
-    "AttributeStore", "Nodeset", "create_nodeset",
+    "AttributeStore", "NodeSelection", "Nodeset", "create_nodeset",
+    "node_filter_mask",
     "barabasi_albert", "erdos_renyi", "random_two_mode", "watts_strogatz",
     "bfs_distances", "connected_components", "degree_centrality",
-    "density", "projected_degree", "shortest_path_length",
-    "bucketed_check_edge", "bucketed_edge_value", "bucketed_node_alters",
-    "plan_buckets",
-    "dichotomize", "filter_edges", "subgraph_layer", "symmetrize",
+    "degree_distribution", "density", "projected_degree",
+    "shortest_path_length",
+    "bucketed_check_edge", "bucketed_edge_value", "bucketed_filtered_degree",
+    "bucketed_node_alters", "plan_buckets",
+    "dichotomize", "filter_edges", "induced_subnetwork", "subgraph_layer",
+    "symmetrize",
     "project_two_mode", "projection_nbytes",
     "ego_sample", "neighborhood_sample", "random_walk",
     "memory_report",

@@ -28,6 +28,7 @@ from .network import Network
 __all__ = [
     "degree_centrality",
     "projected_degree",
+    "degree_distribution",
     "density",
     "attribute_summary",
     "bfs_distances",
@@ -56,6 +57,7 @@ def projected_degree(
     u: jnp.ndarray,
     layer_names: Sequence[str] | None = None,
     max_alters: int | None = None,
+    node_filter=None,
 ) -> jnp.ndarray:
     """Exact *projected* degree per query node -> int32[B].
 
@@ -66,6 +68,7 @@ def projected_degree(
     ``max_alters`` caps the per-node count; the default is exact — a tight
     host-side bound on the batch's largest possible alter set
     (dispatch.alters_bound), falling back to n_nodes under tracing.
+    ``node_filter`` counts only alters passing an attribute predicate.
     """
     from . import dispatch
 
@@ -73,8 +76,34 @@ def projected_degree(
         max_alters = dispatch.alters_bound(
             net._select(layer_names), u, net.n_nodes
         )
-    _, mask = net.node_alters(u, max_alters, layer_names)
+    _, mask = net.node_alters(u, max_alters, layer_names,
+                              node_filter=node_filter)
     return jnp.sum(mask, axis=-1).astype(jnp.int32)
+
+
+def degree_distribution(
+    net: Network,
+    layer_names: Sequence[str] | None = None,
+    node_filter=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Degree histogram over all nodes -> (degrees int64[k], counts int64[k]).
+
+    Degree is the summed per-layer degree (two-mode: membership count),
+    matching ``Network.degree``'s unfiltered semantics. ``node_filter``
+    restricts *which nodes are counted* (the population), not their
+    degrees. Zero-count degrees are omitted.
+    """
+    from .nodeset import node_filter_mask
+
+    total = np.asarray(degree_centrality(net, layer_names), dtype=np.int64)
+    nf = node_filter_mask(node_filter, net.n_nodes)
+    if nf is not None:
+        total = total[np.asarray(nf, dtype=bool)]
+    if total.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    counts = np.bincount(total)
+    degs = np.nonzero(counts)[0]
+    return degs.astype(np.int64), counts[degs].astype(np.int64)
 
 
 def density(layer) -> float:

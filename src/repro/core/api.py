@@ -18,21 +18,43 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .generators import barabasi_albert, erdos_renyi, random_two_mode, watts_strogatz
-from .layers import one_mode_from_edges, two_mode_empty
+from .layers import LayerTwoMode, one_mode_from_edges, two_mode_empty
 from .network import Network, create_network
-from .nodeset import Nodeset, create_nodeset
-from .analysis import shortest_path_length
+from .nodeset import NodeSelection, Nodeset, create_nodeset
+from .analysis import (
+    attribute_summary,
+    connected_components,
+    degree_distribution,
+    density as layer_density,
+    shortest_path_length,
+)
 from .memory import memory_report
-from .io import load_network, save_network
+from .processing import induced_subnetwork
+from .io import (
+    export_layer_tsv,
+    import_layer_tsv,
+    load_attrs_tsv,
+    load_network,
+    save_network,
+)
 
 __all__ = [
     "createnodeset", "createnetwork", "addlayer", "generate",
     "checkedge", "getedge", "getnodealters", "shortestpath",
     "memoryreport", "savefile", "loadfile",
+    # attribute manager + selections
+    "setnodeattr", "getnodeattr", "dropattr", "listattrs", "loadattrs",
+    "selectnodes", "countnodes", "attributesummary",
+    # degree / structure queries
+    "getdegree", "degreedist", "getdensity", "countcomponents",
+    # container surface
+    "listlayers", "deletelayer", "describenet",
+    "exportlayer", "importlayer", "subnetwork", "samplenodes",
 ]
 
 
@@ -72,9 +94,14 @@ def generate(net: Network, name: str, type: str, seed: int = 0, **params) -> Net
     return net.with_layer(name, layer)
 
 
-def checkedge(net: Network, layer: str, u, v):
-    """Paper Listing 3: edge existence (pseudo-projected for 2-mode)."""
-    out = net.check_edge(layer, u, v)
+def checkedge(net: Network, layer: str, u, v, node_filter=None):
+    """Paper Listing 3: edge existence (pseudo-projected for 2-mode).
+
+    ``node_filter`` restricts targets: False whenever v fails the filter.
+    """
+    out = net.check_edge_any(
+        jnp.asarray(u), jnp.asarray(v), [layer], node_filter=node_filter
+    )
     return bool(out[0]) if out.shape == (1,) else out
 
 
@@ -85,9 +112,14 @@ def getedge(net: Network, layer: str, u, v):
 
 def getnodealters(
     net: Network, u, layernames: Sequence[str] | None = None,
-    max_alters: int = 4096,
+    max_alters: int = 4096, node_filter=None,
 ):
-    vals, mask = net.node_alters(jnp.asarray(u), max_alters, layernames)
+    """Alters of u across layers; ``node_filter`` (NodeSelection / bool
+    mask) keeps only alters passing an attribute predicate — paper
+    Listing 3's register-analysis query."""
+    vals, mask = net.node_alters(
+        jnp.asarray(u), max_alters, layernames, node_filter=node_filter
+    )
     if vals.ndim == 2 and vals.shape[0] == 1:
         return jnp.asarray(vals[0][mask[0]])
     return vals, mask
@@ -109,3 +141,228 @@ def savefile(obj: Network, file: str) -> None:
 
 def loadfile(file: str) -> Network:
     return load_network(file)
+
+
+# ---------------------------------------------------------------------------
+# Attribute manager + node selections (paper §3.1 attributes, §3.4 CLI)
+# ---------------------------------------------------------------------------
+
+_KIND_OF_PYTYPE = {bool: "bool", int: "int", float: "float"}
+
+
+def _infer_kind(values) -> str:
+    v = values[0] if isinstance(values, (list, tuple)) else values
+    if isinstance(v, str):
+        if len(v) == 1:
+            return "char"
+        raise ValueError(f"cannot infer attribute kind from string {v!r}")
+    for py, kind in _KIND_OF_PYTYPE.items():
+        if isinstance(v, py):
+            return kind
+    arr = np.asarray(values)
+    if arr.dtype == np.bool_:
+        return "bool"
+    return "int" if np.issubdtype(arr.dtype, np.integer) else "float"
+
+
+def _coerce_attr_values(kind: str, values):
+    vals = values if isinstance(values, (list, tuple, np.ndarray)) else [values]
+    if kind == "char":
+        vals = [ord(v) if isinstance(v, str) else int(v) for v in vals]
+    return np.asarray(vals)
+
+
+def setnodeattr(
+    net: Network, name: str, nodes, values, kind: str | None = None
+) -> Network:
+    """CLI ``setattr``: set attribute values for one or many nodes.
+
+    ``kind`` defaults to the existing column's kind, else is inferred from
+    the value type (bool / int / float / 1-char string). Existing values
+    for other nodes are preserved (sparse upsert).
+    """
+    ns = net.nodeset
+    ids = np.atleast_1d(np.asarray(nodes, dtype=np.int64))
+    if kind is None:
+        kind = (
+            ns.attrs.column(name).kind if name in ns.attrs.names
+            else _infer_kind(values)
+        )
+    vals = _coerce_attr_values(kind, values)
+    vals = np.broadcast_to(vals, ids.shape)
+    if name in ns.attrs.names:
+        col = ns.attrs.column(name)
+        if col.kind != kind:
+            raise ValueError(
+                f"attribute {name!r} is {col.kind!r}, got kind={kind!r}"
+            )
+        old_ids = np.asarray(col.node_ids)
+        old_vals = np.asarray(col.values)
+        ids = np.concatenate([old_ids, ids])
+        vals = np.concatenate([old_vals, vals.astype(old_vals.dtype)])
+    return net.with_nodeset(ns.set_attr(name, kind, ids, vals))
+
+
+def getnodeattr(net: Network, name: str, nodes):
+    """CLI ``getattr`` -> (values, has_mask) numpy arrays."""
+    q = jnp.atleast_1d(jnp.asarray(nodes, dtype=jnp.int32))
+    vals, has = net.nodeset.get_attr(name, q)
+    return np.asarray(vals), np.asarray(has)
+
+
+def dropattr(net: Network, name: str) -> Network:
+    return net.with_nodeset(net.nodeset.drop_attr(name))
+
+
+def listattrs(net: Network) -> list[dict]:
+    return [
+        {"name": n, "kind": c.kind, "n_set": c.n_set}
+        for n, c in zip(net.nodeset.attrs.names, net.nodeset.attrs.columns)
+    ]
+
+
+def loadattrs(
+    net: Network, file: str, name: str | None = None, kind: str | None = None
+) -> Network:
+    """CLI ``loadattrs``: sparse TSV attribute import (see io.load_attrs_tsv)."""
+    ns = net.nodeset
+    for aname, akind, ids, vals in load_attrs_tsv(file, name=name, kind=kind):
+        ns = ns.set_attr(aname, akind, ids, vals)
+    return net.with_nodeset(ns)
+
+
+def selectnodes(net: Network, name: str, op: str, value=None) -> NodeSelection:
+    """CLI ``selectnodes``: vectorized attribute predicate -> NodeSelection."""
+    return net.nodeset.select(name, op, value)
+
+
+def countnodes(net: Network, selection: NodeSelection | None = None) -> int:
+    if selection is None:
+        return net.n_nodes
+    return selection.count
+
+
+def attributesummary(net: Network, name: str) -> dict:
+    return attribute_summary(net, name)
+
+
+# ---------------------------------------------------------------------------
+# Degree / structure queries
+# ---------------------------------------------------------------------------
+
+
+def getdegree(
+    net: Network, u, layernames: Sequence[str] | None = None, node_filter=None
+):
+    """Per-node degree; with ``node_filter`` the filtered alter count
+    (see Network.degree)."""
+    out = net.degree(jnp.asarray(u), layernames, node_filter=node_filter)
+    return int(out[0]) if out.shape == (1,) else np.asarray(out)
+
+
+def degreedist(
+    net: Network, layernames: Sequence[str] | None = None, node_filter=None
+) -> list[list[int]]:
+    """Degree histogram -> [[degree, count], ...] ascending (CLI table)."""
+    degs, counts = degree_distribution(net, layernames, node_filter=node_filter)
+    return [[int(d), int(c)] for d, c in zip(degs, counts)]
+
+
+def getdensity(net: Network, layer: str) -> float:
+    return layer_density(net.layer(layer))
+
+
+def countcomponents(
+    net: Network, layernames: Sequence[str] | None = None
+) -> int:
+    labels = np.asarray(connected_components(net, layernames))
+    return int(np.unique(labels).size)
+
+
+# ---------------------------------------------------------------------------
+# Container surface
+# ---------------------------------------------------------------------------
+
+
+def listlayers(net: Network) -> list[dict]:
+    return [
+        {
+            "name": name,
+            "mode": layer.mode,
+            "edges": (
+                layer.n_memberships if isinstance(layer, LayerTwoMode)
+                else layer.n_edges
+            ),
+        }
+        for name, layer in zip(net.layer_names, net.layers)
+    ]
+
+
+def deletelayer(net: Network, name: str) -> Network:
+    return net.without_layer(name)
+
+
+def describenet(net: Network) -> dict:
+    """One-call structural summary (CLI ``describenet``)."""
+    return {
+        "n_nodes": net.n_nodes,
+        "n_layers": len(net.layers),
+        "total_bytes": net.nbytes,
+        "layers": [
+            {
+                "name": name,
+                "mode": layer.mode,
+                "bytes": layer.nbytes,
+                **(
+                    {
+                        "memberships": layer.n_memberships,
+                        "hyperedges": layer.n_hyperedges,
+                        "equivalent_projected_edges":
+                            layer.equivalent_projected_edges(),
+                    }
+                    if isinstance(layer, LayerTwoMode)
+                    else {"edges": layer.n_edges, "directed": layer.directed}
+                ),
+            }
+            for name, layer in zip(net.layer_names, net.layers)
+        ],
+        "attrs": listattrs(net),
+    }
+
+
+def exportlayer(net: Network, layer: str, file: str) -> None:
+    export_layer_tsv(net, layer, file)
+
+
+def importlayer(
+    net: Network, name: str, file: str, mode: int = 1,
+    directed: bool = False, valued: bool = False,
+    n_hyperedges: int | None = None, default_value: float | None = None,
+) -> Network:
+    layer = import_layer_tsv(
+        file, net.n_nodes, mode=mode, directed=directed, valued=valued,
+        n_hyperedges=n_hyperedges, default_value=default_value,
+    )
+    return net.with_layer(name, layer)
+
+
+def subnetwork(net: Network, selection) -> Network:
+    """CLI ``subnetwork``: induced subgraph over a NodeSelection, with
+    compacted node ids and an ``orig_id`` attribute back-reference."""
+    return induced_subnetwork(net, selection)
+
+
+def samplenodes(
+    net: Network, n: int, seed: int = 0,
+    selection: NodeSelection | None = None,
+) -> np.ndarray:
+    """Uniform node-id sample (without replacement when possible); with
+    ``selection``, samples only selected nodes."""
+    rng = np.random.default_rng(seed)
+    pool = selection.ids() if selection is not None else net.n_nodes
+    pool_size = len(pool) if selection is not None else pool
+    n = int(n)
+    if pool_size == 0:
+        return np.zeros(0, np.int64)
+    replace = n > pool_size
+    return np.sort(rng.choice(pool, size=n, replace=replace).astype(np.int64))

@@ -31,17 +31,50 @@ import numpy as np
 
 from . import api
 from .memory import memory_report
-
-_TOKEN = re.compile(r'"[^"]*"|[^,]+')
+from .nodeset import NodeSelection
 
 
 class CLIError(ValueError):
     pass
 
 
+def _split_outside_quotes(s: str, sep: str) -> list[str]:
+    """Split on ``sep`` only where it is not inside a double-quoted string
+    (the _TOKEN-regex tokenizer split `file = "my,file.npz"` into three
+    tokens — quotes must win over separators)."""
+    out, buf, in_q = [], [], False
+    for ch in s:
+        if ch == '"':
+            in_q = not in_q
+            buf.append(ch)
+        elif ch == sep and not in_q:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    out.append("".join(buf))
+    return out
+
+
+def _find_outside_quotes(s: str, ch: str) -> int:
+    """Index of the first ``ch`` outside double quotes, or -1."""
+    in_q = False
+    for i, c in enumerate(s):
+        if c == '"':
+            in_q = not in_q
+        elif c == ch and not in_q:
+            return i
+    return -1
+
+
+def _strip_comment(line: str) -> str:
+    i = _find_outside_quotes(line, "#")
+    return line if i < 0 else line[:i]
+
+
 def _parse_value(tok: str):
     tok = tok.strip()
-    if tok.startswith('"') and tok.endswith('"'):
+    if tok.startswith('"') and tok.endswith('"') and len(tok) >= 2:
         return tok[1:-1]
     low = tok.lower()
     if low in ("true", "false"):
@@ -60,26 +93,48 @@ def _parse_value(tok: str):
 def _parse_call(line: str):
     """'x = cmd(a, k = v, names = A; B)' -> (target, cmd, args, kwargs)."""
     target = None
-    if "=" in line.split("(", 1)[0]:
+    head = line.split("(", 1)[0]
+    if "=" in head:
         target, line = (s.strip() for s in line.split("=", 1))
     m = re.match(r"^\s*(\w+)\s*\((.*)\)\s*$", line, re.S)
     if not m:
         raise CLIError(f"cannot parse: {line!r}")
     cmd, body = m.group(1), m.group(2)
     args, kwargs = [], {}
-    for tok in _TOKEN.findall(body):
+    for tok in _split_outside_quotes(body, ","):
         tok = tok.strip()
         if not tok:
             continue
-        if "=" in tok and not tok.startswith('"'):
-            k, v = (s.strip() for s in tok.split("=", 1))
-            if ";" in v:
-                kwargs[k] = [_parse_value(x) for x in v.split(";")]
+        eq = -1 if tok.startswith('"') else _find_outside_quotes(tok, "=")
+        if eq >= 0:
+            k, v = tok[:eq].strip(), tok[eq + 1 :].strip()
+            parts = _split_outside_quotes(v, ";")
+            if len(parts) > 1:
+                kwargs[k] = [_parse_value(x) for x in parts]
             else:
                 kwargs[k] = _parse_value(v)
         else:
             args.append(_parse_value(tok))
     return target, cmd, args, kwargs
+
+
+def _jsonable(x):
+    """Engine results -> JSON-safe values (numpy scalars/arrays, selections)."""
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, NodeSelection):
+        return {"count": x.count, "n_nodes": x.n_nodes}
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (np.bool_,)):
+        return bool(x)
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    return x
 
 
 class Session:
@@ -98,13 +153,21 @@ class Session:
 
     def _emit(self, command: str, result) -> str:
         if self.mode == "json":
-            return json.dumps({"command": command, "result": result})
+            return json.dumps({"command": command, "result": _jsonable(result)})
         return f"{result}"
+
+    def _node_filter(self, filter):
+        """Resolve a CLI ``filter=`` argument to a NodeSelection/mask."""
+        if filter is None:
+            return None
+        if isinstance(filter, str):
+            raise CLIError(f"unknown selection {filter!r} (not a variable)")
+        return filter
 
     # -- command dispatch ----------------------------------------------------
 
     def run_line(self, line: str) -> str | None:
-        line = line.split("#", 1)[0].strip()
+        line = _strip_comment(line).strip()
         if not line:
             return None
         target, cmd, args, kwargs = _parse_call(line)
@@ -146,29 +209,28 @@ class Session:
         self._rebind(net, new)
         return None, new
 
-    def _cmd_checkedge(self, net, layer, u, v):
-        return bool(api.checkedge(net, str(layer), int(u), int(v))), None
+    def _cmd_checkedge(self, net, layer, u, v, *, filter=None):
+        return bool(api.checkedge(
+            net, str(layer), int(u), int(v),
+            node_filter=self._node_filter(filter),
+        )), None
 
     def _cmd_getedge(self, net, layer, u, v):
         return float(api.getedge(net, str(layer), int(u), int(v))), None
 
-    def _cmd_getnodealters(self, net, u, *, layernames=None, max_alters=4096):
-        names = None
-        if layernames is not None:
-            names = [str(n) for n in (
-                layernames if isinstance(layernames, list) else [layernames]
-            )]
-        alters = api.getnodealters(net, int(u), layernames=names,
-                                   max_alters=int(max_alters))
+    def _cmd_getnodealters(self, net, u, *, layernames=None, max_alters=4096,
+                           filter=None):
+        alters = api.getnodealters(
+            net, int(u), layernames=_names(layernames),
+            max_alters=int(max_alters),
+            node_filter=self._node_filter(filter),
+        )
         return np.asarray(alters).tolist(), None
 
     def _cmd_shortestpath(self, net, u, v, *, layernames=None):
-        names = None
-        if layernames is not None:
-            names = [str(n) for n in (
-                layernames if isinstance(layernames, list) else [layernames]
-            )]
-        return api.shortestpath(net, int(u), int(v), layernames=names), None
+        return api.shortestpath(
+            net, int(u), int(v), layernames=_names(layernames)
+        ), None
 
     def _cmd_memoryreport(self, net):
         rep = memory_report(net)
@@ -195,12 +257,159 @@ class Session:
     def _cmd_loadfile(self, *, file):
         return None, api.loadfile(str(file))
 
+    # -- attribute manager + selections (paper §3.1 / §3.4) -------------------
+
+    def _cmd_setattr(self, net, name, nodes, values, *, kind=None):
+        new = api.setnodeattr(
+            net, str(name), nodes, values,
+            kind=None if kind is None else str(kind),
+        )
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_getattr(self, net, name, nodes):
+        vals, has = api.getnodeattr(net, str(name), nodes)
+        kind = net.nodeset.attrs.column(str(name)).kind
+        out = [
+            (chr(int(v)) if kind == "char" else _jsonable(v)) if h else None
+            for v, h in zip(np.atleast_1d(vals), np.atleast_1d(has))
+        ]
+        return (out[0] if np.ndim(nodes) == 0 else out), None
+
+    def _cmd_dropattr(self, net, name):
+        new = api.dropattr(net, str(name))
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_listattrs(self, net):
+        return api.listattrs(net), None
+
+    def _cmd_loadattrs(self, net, *, file, name=None, kind=None):
+        new = api.loadattrs(
+            net, str(file),
+            name=None if name is None else str(name),
+            kind=None if kind is None else str(kind),
+        )
+        self._rebind(net, new)
+        loaded = [a for a in new.nodeset.attrs.names
+                  if a not in net.nodeset.attrs.names]
+        return {"loaded": loaded or list(new.nodeset.attrs.names)}, new
+
+    def _cmd_selectnodes(self, net, *, attr, op, value=None):
+        sel = api.selectnodes(net, str(attr), str(op), value)
+        return {"count": sel.count}, sel
+
+    def _cmd_combineselect(self, a, b, *, op="and"):
+        if not isinstance(a, NodeSelection) or not isinstance(b, NodeSelection):
+            raise CLIError("combineselect needs two selection variables")
+        if str(op) == "and":
+            sel = a & b
+        elif str(op) == "or":
+            sel = a | b
+        else:
+            raise CLIError(f"combineselect op must be and/or, got {op!r}")
+        return {"count": sel.count}, sel
+
+    def _cmd_invertselect(self, sel):
+        if not isinstance(sel, NodeSelection):
+            raise CLIError("invertselect needs a selection variable")
+        inv = ~sel
+        return {"count": inv.count}, inv
+
+    def _cmd_countnodes(self, net, sel=None):
+        return api.countnodes(net, sel), None
+
+    def _cmd_attributesummary(self, net, name):
+        return api.attributesummary(net, str(name)), None
+
+    # -- degree / structure ---------------------------------------------------
+
+    def _cmd_getdegree(self, net, u, *, layernames=None, filter=None):
+        out = api.getdegree(
+            net, int(u), layernames=_names(layernames),
+            node_filter=self._node_filter(filter),
+        )
+        return _jsonable(out), None
+
+    def _cmd_degreedist(self, net, *, layernames=None, filter=None):
+        dist = api.degreedist(
+            net, layernames=_names(layernames),
+            node_filter=self._node_filter(filter),
+        )
+        if self.mode == "json":
+            return dist, None
+        return " ".join(f"{d}:{c}" for d, c in dist), None
+
+    def _cmd_density(self, net, layer):
+        return float(api.getdensity(net, str(layer))), None
+
+    def _cmd_components(self, net, *, layernames=None):
+        return api.countcomponents(net, layernames=_names(layernames)), None
+
+    # -- container surface ----------------------------------------------------
+
+    def _cmd_listlayers(self, net):
+        return api.listlayers(net), None
+
+    def _cmd_deletelayer(self, net, name):
+        new = api.deletelayer(net, str(name))
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_describenet(self, net):
+        return api.describenet(net), None
+
+    def _cmd_exportlayer(self, net, layer, *, file):
+        api.exportlayer(net, str(layer), str(file))
+        return f"exported {layer} to {file}", None
+
+    def _cmd_importlayer(self, net, name, *, file, mode=1, directed=False,
+                         valued=False, n_hyperedges=None, default_value=None):
+        new = api.importlayer(
+            net, str(name), str(file), mode=int(mode),
+            directed=bool(directed), valued=bool(valued),
+            n_hyperedges=None if n_hyperedges is None else int(n_hyperedges),
+            default_value=default_value,
+        )
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_subnetwork(self, net, sel):
+        if not isinstance(sel, NodeSelection):
+            raise CLIError("subnetwork needs a selection variable")
+        sub = api.subnetwork(net, sel)
+        return {"n_nodes": sub.n_nodes,
+                "layers": list(sub.layer_names)}, sub
+
+    def _cmd_samplenodes(self, net, n, *, seed=0, filter=None):
+        sel = self._node_filter(filter)
+        if sel is not None and not isinstance(sel, NodeSelection):
+            sel = NodeSelection(np.asarray(sel, dtype=bool))
+        ids = api.samplenodes(net, int(n), seed=int(seed), selection=sel)
+        return ids.tolist(), None
+
     # rebinding: commands that 'mutate' a network rebind every name that
     # pointed at the old object (functional engine, paper-style syntax)
     def _rebind(self, old, new):
         for k, v in list(self.env.items()):
             if v is old:
                 self.env[k] = new
+
+    @classmethod
+    def commands(cls) -> list[str]:
+        """Every dispatchable command name (the paper's command surface)."""
+        return sorted(
+            m[len("_cmd_"):] for m in dir(cls) if m.startswith("_cmd_")
+        )
+
+
+def _names(layernames) -> list[str] | None:
+    """Normalize a CLI layernames value (bare name or A; B list) to a list."""
+    if layernames is None:
+        return None
+    return [str(n) for n in (
+        layernames if isinstance(layernames, list) else [layernames]
+    )]
 
 
 def main() -> None:

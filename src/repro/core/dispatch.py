@@ -39,7 +39,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .csr import CSR, SENTINEL, on_tpu as _on_tpu, sorted_isin
+from .csr import CSR, SENTINEL, csr_row_gather, on_tpu as _on_tpu, sorted_isin
 
 __all__ = [
     "DEFAULT_BUCKET_WIDTHS",
@@ -48,6 +48,7 @@ __all__ = [
     "bucketed_edge_value",
     "bucketed_check_edge",
     "bucketed_node_alters",
+    "bucketed_filtered_degree",
     "alters_bound",
     "union_rows",
     "node_max_hyperedge_size",
@@ -184,15 +185,23 @@ def _edge_value_bucket(layer, u, v, *, width, use_pallas, interpret):
     ),
 )
 def _node_alters_bucket(
-    layer, u, *, width_m, width_n, max_alters, use_pallas, interpret
+    layer, u, node_filter=None, *,
+    width_m, width_n, max_alters, use_pallas, interpret,
 ):
     from repro.kernels import ops as kops
 
     return kops.pseudo_node_alters(
         layer, u, max_alters,
-        width_m=width_m, width_n=width_n,
+        width_m=width_m, width_n=width_n, node_filter=node_filter,
         use_pallas=use_pallas, interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _one_mode_filtered_degree_bucket(layer, u, node_filter, *, width):
+    vals, mask = csr_row_gather(layer.out, u, width)
+    hit = mask & jnp.take(node_filter, vals, mode="clip")
+    return jnp.sum(hit, axis=-1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +214,7 @@ def bucketed_edge_value(
     u: jnp.ndarray,
     v: jnp.ndarray,
     *,
+    node_filter=None,
     widths=DEFAULT_BUCKET_WIDTHS,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
@@ -214,6 +224,11 @@ def bucketed_edge_value(
     Buckets by max(deg(u), deg(v)) so both membership rows fit the bucket
     width. ``use_pallas=None`` auto-selects: the Pallas intersect kernel on
     TPU for buckets >= PALLAS_MIN_WIDTH, ``sorted_isin`` otherwise.
+
+    ``node_filter`` (bool[n_nodes]) restricts the query to selected target
+    nodes: pairs whose ``v`` fails the filter return 0 — and are dropped
+    from the plan *before* any bucket runs, so a mostly-filtered batch does
+    a fraction of the unfiltered work.
     """
     shape = jnp.shape(u)
     un = np.asarray(u, dtype=np.int64).reshape(-1)
@@ -221,6 +236,17 @@ def bucketed_edge_value(
     B = un.size
     if B == 0:
         return jnp.zeros(shape, jnp.float32)
+    if node_filter is not None:
+        nf = np.asarray(node_filter, dtype=bool)
+        keep = nf[np.clip(vn, 0, nf.size - 1)]
+        out = jnp.zeros((B,), jnp.float32)
+        if keep.any():
+            sub = bucketed_edge_value(
+                layer, un[keep], vn[keep],
+                widths=widths, use_pallas=use_pallas, interpret=interpret,
+            )
+            out = out.at[jnp.asarray(np.nonzero(keep)[0])].set(sub)
+        return out.reshape(shape)
     deg = np.maximum(
         _host_degrees(layer.memb, un), _host_degrees(layer.memb, vn)
     )
@@ -249,6 +275,7 @@ def bucketed_node_alters(
     u: jnp.ndarray,
     max_alters: int,
     *,
+    node_filter=None,
     widths=DEFAULT_BUCKET_WIDTHS,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
@@ -259,6 +286,12 @@ def bucketed_node_alters(
     hyperedge size among the bucket's nodes, rounded up the same width
     ladder (compile-count bound). Output rows are sorted-unique and capped
     at ``max_alters`` — bit-identical to the padded reference path.
+
+    ``node_filter`` (bool[n_nodes]) masks alters by attribute predicate
+    *inside each bucket*, before the segmented-union dedup — a filtered
+    query never widens beyond its bucket's pad width, and the cap applies
+    to the filtered set (the post-filter oracle: take the unfiltered
+    alters at full width, drop failing ids, then cap at ``max_alters``).
     """
     shape = jnp.shape(u)
     un = np.asarray(u, dtype=np.int64).reshape(-1)
@@ -268,6 +301,9 @@ def bucketed_node_alters(
             jnp.full(shape + (max_alters,), SENTINEL, jnp.int32),
             jnp.zeros(shape + (max_alters,), bool),
         )
+    nf = None if node_filter is None else jnp.asarray(
+        np.asarray(node_filter, dtype=bool)
+    )
     deg = _host_degrees(layer.memb, un)
     per_node_wn = node_max_hyperedge_size(layer)
     vals = jnp.full((B, max_alters), SENTINEL, jnp.int32)
@@ -285,13 +321,71 @@ def bucketed_node_alters(
             else (_on_tpu() and wm * wn <= UNION_PALLAS_MAX_FLAT)
         )
         va, _ = _node_alters_bucket(
-            layer, _pad_rows(un[idx], n),
+            layer, _pad_rows(un[idx], n), nf,
             width_m=wm, width_n=wn, max_alters=max_alters,
             use_pallas=pallas_here, interpret=interpret,
         )
         vals = vals.at[jnp.asarray(idx)].set(va[: idx.size])
     vals = vals.reshape(shape + (max_alters,))
     return vals, vals != SENTINEL
+
+
+def bucketed_filtered_degree(
+    layer,
+    u: jnp.ndarray,
+    node_filter,
+    *,
+    widths=DEFAULT_BUCKET_WIDTHS,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Degree-bucketed filtered-alter count -> int32[...].
+
+    One-mode: neighbors passing the filter (gather at the bucket width +
+    mask-sum). Two-mode: *distinct* co-members passing the filter — each
+    bucket runs the filtered alters kernel at its exact flat width
+    (wm × wn) so the count is uncapped and exact.
+    """
+    shape = jnp.shape(u)
+    un = np.asarray(u, dtype=np.int64).reshape(-1)
+    B = un.size
+    if B == 0:
+        return jnp.zeros(shape, jnp.int32)
+    nf = jnp.asarray(np.asarray(node_filter, dtype=bool))
+    out = jnp.zeros((B,), jnp.int32)
+    memb = getattr(layer, "memb", None)
+    if memb is None:  # one-mode
+        deg = _host_degrees(layer.out, un)
+        for idx, w in plan_buckets(deg, max(int(deg.max()), 1), widths):
+            n = _pow2_rows(idx.size)
+            res = _one_mode_filtered_degree_bucket(
+                layer, _pad_rows(un[idx], n), nf, width=w
+            )
+            out = out.at[jnp.asarray(idx)].set(res[: idx.size])
+        return out.reshape(shape)
+    deg = _host_degrees(memb, un)
+    per_node_wn = node_max_hyperedge_size(layer)
+    for idx, wm in plan_buckets(deg, layer.max_memberships, widths):
+        needed = int(per_node_wn[np.clip(un[idx], 0, per_node_wn.size - 1)].max())
+        wn = next(
+            w
+            for w in _width_ladder(layer.max_hyperedge_size, widths)
+            if w >= needed
+        )
+        n = _pow2_rows(idx.size)
+        pallas_here = (
+            use_pallas
+            if use_pallas is not None
+            else (_on_tpu() and wm * wn <= UNION_PALLAS_MAX_FLAT)
+        )
+        va, _ = _node_alters_bucket(
+            layer, _pad_rows(un[idx], n), nf,
+            width_m=wm, width_n=wn, max_alters=wm * wn,
+            use_pallas=pallas_here, interpret=interpret,
+        )
+        counts = jnp.sum(va != SENTINEL, axis=-1).astype(jnp.int32)
+        out = out.at[jnp.asarray(idx)].set(counts[: idx.size])
+    return out.reshape(shape)
 
 
 def alters_bound(layers, u, n_nodes: int) -> int:

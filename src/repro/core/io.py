@@ -26,6 +26,7 @@ __all__ = [
     "load_network",
     "export_layer_tsv",
     "import_layer_tsv",
+    "load_attrs_tsv",
 ]
 
 
@@ -166,26 +167,147 @@ def import_layer_tsv(
     directed: bool = False,
     valued: bool = False,
     n_hyperedges: int | None = None,
+    default_value: float | None = None,
 ):
-    """Inverse of export_layer_tsv. Returns a layer object."""
+    """Inverse of export_layer_tsv. Returns a layer object.
+
+    With ``valued=True`` every row must carry a third (value) column —
+    rows without one previously shifted later values onto the wrong edges.
+    A missing value now raises, unless ``default_value`` is given, in
+    which case it fills the gap.
+    """
     path = Path(path)
     src, dst, vals = [], [], []
     with _open_text(path, "r") as f:
-        for line in f:
+        for lineno, line in enumerate(f, 1):
             parts = line.rstrip("\n").split("\t")
             if len(parts) < 2:
                 continue
             src.append(int(parts[0]))
             dst.append(int(parts[1]))
-            if valued and len(parts) > 2:
-                vals.append(float(parts[2]))
+            if valued:
+                if len(parts) > 2 and parts[2] != "":
+                    vals.append(float(parts[2]))
+                elif default_value is not None:
+                    vals.append(float(default_value))
+                else:
+                    raise ValueError(
+                        f"{path}:{lineno}: valued import but row "
+                        f"{parts[0]!r}\\t{parts[1]!r} has no value column; "
+                        "fix the file or pass default_value to fill"
+                    )
     src_a = np.asarray(src, dtype=np.int64)
     dst_a = np.asarray(dst, dtype=np.int64)
     if mode == 2:
-        h = n_hyperedges if n_hyperedges is not None else int(dst_a.max()) + 1
+        h = n_hyperedges if n_hyperedges is not None else (
+            int(dst_a.max()) + 1 if dst_a.size else 1
+        )
         return two_mode_from_memberships(n_nodes, h, src_a, dst_a)
     return one_mode_from_edges(
         n_nodes, src_a, dst_a,
-        values=np.asarray(vals, dtype=np.float32) if vals else None,
+        values=np.asarray(vals, dtype=np.float32) if valued else None,
         directed=directed,
     )
+
+
+def _parse_bool_cell(s: str) -> bool:
+    t = s.strip().lower()
+    if t in ("true", "1", "t", "yes"):
+        return True
+    if t in ("false", "0", "f", "no"):
+        return False
+    raise ValueError(f"not a bool: {s!r}")
+
+
+def _parse_char_cell(s: str) -> int:
+    t = s.strip()
+    if len(t) != 1:
+        raise ValueError(f"char needs exactly 1 character, got {s!r}")
+    return ord(t)
+
+
+# Attribute TSV parsing: per-kind value readers; all raise ValueError on
+# malformed cells (matching nodeset._coerce_value's strictness).
+_ATTR_PARSERS = {
+    "int": lambda s: int(float(s)),
+    "float": float,
+    "bool": _parse_bool_cell,
+    "char": _parse_char_cell,
+}
+
+
+def load_attrs_tsv(
+    path: str | Path,
+    name: str | None = None,
+    kind: str | None = None,
+) -> list[tuple[str, str, np.ndarray, np.ndarray]]:
+    """Sparse node-attribute TSV import (CLI ``loadattrs``).
+
+    Two accepted shapes:
+
+    * header format — first line ``node<TAB>name:kind[<TAB>name:kind...]``,
+      one column per attribute; an *empty cell* means the node has no value
+      for that attribute (heterogeneous availability, paper §3.1).
+    * two columns ``node<TAB>value`` with ``name``/``kind`` passed in.
+
+    Returns ``[(name, kind, node_ids, values)]`` ready for
+    ``Nodeset.set_attr``.
+    """
+    path = Path(path)
+    with _open_text(path, "r") as f:
+        lines = [l.rstrip("\n") for l in f]
+    lines = [l for l in lines if l.strip()]
+    if not lines:
+        return []
+    head = lines[0].split("\t")
+    if head[0].lstrip("#").strip().lower() == "node" and len(head) > 1:
+        cols = []
+        for spec in head[1:]:
+            if ":" not in spec:
+                raise ValueError(
+                    f"{path}: header column {spec!r} is not 'name:kind'"
+                )
+            cname, ckind = (s.strip() for s in spec.rsplit(":", 1))
+            if ckind not in _ATTR_PARSERS:
+                raise ValueError(
+                    f"{path}: unknown attribute kind {ckind!r} in header"
+                )
+            cols.append((cname, ckind, [], []))
+        for lineno, line in enumerate(lines[1:], 2):
+            parts = line.split("\t")
+            node = int(parts[0])
+            for ci, (cname, ckind, ids, vals) in enumerate(cols):
+                cell = parts[ci + 1].strip() if ci + 1 < len(parts) else ""
+                if cell == "":
+                    continue  # sparse: absent value costs nothing
+                try:
+                    vals.append(_ATTR_PARSERS[ckind](cell))
+                except (ValueError, IndexError):
+                    raise ValueError(
+                        f"{path}:{lineno}: cannot parse {cell!r} as {ckind}"
+                    ) from None
+                ids.append(node)
+        return [
+            (cname, ckind, np.asarray(ids, np.int64), np.asarray(vals))
+            for cname, ckind, ids, vals in cols
+        ]
+    if name is None or kind is None:
+        raise ValueError(
+            f"{path} has no 'node<TAB>name:kind' header; pass name= and kind="
+        )
+    if kind not in _ATTR_PARSERS:
+        raise ValueError(f"unknown attribute kind {kind!r}")
+    ids, vals = [], []
+    for lineno, line in enumerate(lines, 1):
+        parts = line.split("\t")
+        if len(parts) < 2 or parts[1].strip() == "":
+            raise ValueError(f"{path}:{lineno}: expected node<TAB>value")
+        ids.append(int(parts[0]))
+        try:
+            vals.append(_ATTR_PARSERS[kind](parts[1].strip()))
+        except ValueError:
+            raise ValueError(
+                f"{path}:{lineno}: cannot parse {parts[1].strip()!r} "
+                f"as {kind}"
+            ) from None
+    return [(name, kind, np.asarray(ids, np.int64), np.asarray(vals))]

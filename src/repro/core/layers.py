@@ -84,18 +84,61 @@ class LayerOneMode:
         """Logical edge count (undirected edges counted once)."""
         return self.out.nnz if self.directed else self.out.nnz // 2
 
-    def check_edge(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-        return csr_contains(self.out, u, v)
+    def check_edge(
+        self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
+    ) -> jnp.ndarray:
+        hit = csr_contains(self.out, u, v)
+        if node_filter is not None:
+            hit = hit & jnp.take(jnp.asarray(node_filter), v, mode="clip")
+        return hit
 
-    def edge_value(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-        return csr_value_at(self.out, u, v)
+    def edge_value(
+        self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
+    ) -> jnp.ndarray:
+        val = csr_value_at(self.out, u, v)
+        if node_filter is not None:
+            val = jnp.where(
+                jnp.take(jnp.asarray(node_filter), v, mode="clip"), val, 0.0
+            )
+        return val
 
     def node_alters(
-        self, u: jnp.ndarray, max_alters: int, inbound: bool = False
+        self, u: jnp.ndarray, max_alters: int, inbound: bool = False,
+        node_filter=None,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """Padded outbound (or inbound) neighbor lists -> (int32[B,K], mask)."""
+        """Padded outbound (or inbound) neighbor lists -> (int32[B,K], mask).
+
+        ``node_filter`` (bool[n_nodes]) drops neighbors failing an
+        attribute predicate (mask holes; ids replaced by SENTINEL).
+        """
         csr = self._in_csr() if inbound else self.out
-        return csr_row_gather(csr, u, max_alters)
+        vals, mask = csr_row_gather(csr, u, max_alters)
+        if node_filter is not None:
+            mask = mask & jnp.take(
+                jnp.asarray(node_filter), vals, mode="clip"
+            )
+            vals = jnp.where(mask, vals, SENTINEL)
+        return vals, mask
+
+    def filtered_degree(self, u: jnp.ndarray, node_filter) -> jnp.ndarray:
+        """Count of out-neighbors passing ``node_filter`` -> int32[B].
+
+        Concrete batches run degree-bucketed (core/dispatch.py); traced
+        batches use an O(nnz) per-node filtered-degree precompute.
+        """
+        if dispatch.can_dispatch(
+            u, node_filter, self.out.indptr, self.out.indices
+        ):
+            return dispatch.bucketed_filtered_degree(self, u, node_filter)
+        nf = jnp.asarray(node_filter)
+        rows = jnp.searchsorted(
+            self.out.indptr,
+            jnp.arange(self.out.nnz, dtype=jnp.int32),
+            side="right",
+        ) - 1
+        contrib = jnp.take(nf, self.out.indices, mode="clip").astype(jnp.int32)
+        per_node = jnp.zeros((self.out.n_rows,), jnp.int32).at[rows].add(contrib)
+        return jnp.take(per_node, u, mode="clip")
 
     def sample_neighbor(
         self, u: jnp.ndarray, key: jax.Array
@@ -225,32 +268,49 @@ class LayerTwoMode:
         k = self.max_memberships if max_len is None else max_len
         return csr_row_gather(self.memb, u, max(k, 1))
 
-    def check_edge(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    def check_edge(
+        self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
+    ) -> jnp.ndarray:
         """Pseudo-projected edge existence: do u and v share a hyperedge?"""
-        return self.edge_value(u, v) > 0
+        return self.edge_value(u, v, node_filter=node_filter) > 0
 
-    def edge_value(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    def edge_value(
+        self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
+    ) -> jnp.ndarray:
         """Pseudo-projected edge value: number of shared hyperedges (f32[B]).
 
         Concrete query batches go through the degree-bucketed dispatcher
         (core/dispatch.py); traced batches (inside a caller's jit) fall
         back to the global-max padded path below. Results are identical.
+
+        ``node_filter`` restricts targets: pairs whose ``v`` fails the
+        filter return 0 (and skip the bucketed work entirely).
         """
-        if dispatch.can_dispatch(u, v, self.memb.indptr, self.memb.indices):
-            return dispatch.bucketed_edge_value(self, u, v)
-        return self.edge_value_padded(u, v)
+        if dispatch.can_dispatch(
+            u, v, node_filter, self.memb.indptr, self.memb.indices
+        ):
+            return dispatch.bucketed_edge_value(
+                self, u, v, node_filter=node_filter
+            )
+        return self.edge_value_padded(u, v, node_filter=node_filter)
 
     def edge_value_padded(
-        self, u: jnp.ndarray, v: jnp.ndarray
+        self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
     ) -> jnp.ndarray:
         """Global-max-padded reference path (jit-compatible baseline)."""
         a, am = self.memberships(u)
         b, bm = self.memberships(v)
         hits = sorted_isin(a, am, b, bm)
-        return jnp.sum(hits, axis=-1).astype(jnp.float32)
+        val = jnp.sum(hits, axis=-1).astype(jnp.float32)
+        if node_filter is not None:
+            val = jnp.where(
+                jnp.take(jnp.asarray(node_filter), v, mode="clip"), val, 0.0
+            )
+        return val
 
     def node_alters(
-        self, u: jnp.ndarray, max_alters: int, inbound: bool = False
+        self, u: jnp.ndarray, max_alters: int, inbound: bool = False,
+        node_filter=None,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Pseudo-projected alters: union of co-members across u's hyperedges.
 
@@ -258,16 +318,21 @@ class LayerTwoMode:
         batches run degree-bucketed (per-bucket two-hop gather widths +
         segmented-union dedup); traced batches use the global-max padded
         gather-cube + sort below. Results are identical.
+
+        ``node_filter`` (bool[n_nodes]) keeps only alters passing an
+        attribute predicate; the ``max_alters`` cap applies post-filter.
         """
         if dispatch.can_dispatch(
-            u, self.memb.indptr, self.memb.indices,
+            u, node_filter, self.memb.indptr, self.memb.indices,
             self.members.indptr, self.members.indices,
         ):
-            return dispatch.bucketed_node_alters(self, u, max_alters)
-        return self.node_alters_padded(u, max_alters)
+            return dispatch.bucketed_node_alters(
+                self, u, max_alters, node_filter=node_filter
+            )
+        return self.node_alters_padded(u, max_alters, node_filter=node_filter)
 
     def node_alters_padded(
-        self, u: jnp.ndarray, max_alters: int
+        self, u: jnp.ndarray, max_alters: int, node_filter=None
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Global-max-padded reference path: the union is computed over
         max_memberships × max_hyperedge_size gathered slots then deduped
@@ -276,7 +341,28 @@ class LayerTwoMode:
         bucketed-vs-padded parity contract has a single source of truth."""
         from repro.kernels import ops as kops
 
-        return kops.pseudo_node_alters(self, u, max_alters, use_pallas=False)
+        nf = None if node_filter is None else jnp.asarray(node_filter)
+        return kops.pseudo_node_alters(
+            self, u, max_alters, node_filter=nf, use_pallas=False
+        )
+
+    def filtered_degree(self, u: jnp.ndarray, node_filter) -> jnp.ndarray:
+        """Distinct co-members passing ``node_filter`` -> int32[B].
+
+        This is the degree of u in the never-materialized projection
+        restricted to the selection (≠ the unfiltered ``degrees()``, which
+        counts memberships). Concrete batches run bucketed at exact
+        per-bucket flat widths; traced batches count the padded path's
+        mask at the layer-global flat width.
+        """
+        if dispatch.can_dispatch(
+            u, node_filter, self.memb.indptr, self.memb.indices,
+            self.members.indptr, self.members.indices,
+        ):
+            return dispatch.bucketed_filtered_degree(self, u, node_filter)
+        bound = max(self.max_memberships * self.max_hyperedge_size, 1)
+        _, mask = self.node_alters_padded(u, bound, node_filter=node_filter)
+        return jnp.sum(mask, axis=-1).astype(jnp.int32)
 
     def sample_neighbor(
         self, u: jnp.ndarray, key: jax.Array

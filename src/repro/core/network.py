@@ -24,7 +24,7 @@ from . import dispatch
 from .pytree import pytree_dataclass
 from .csr import SENTINEL
 from .layers import LayerOneMode, LayerTwoMode
-from .nodeset import Nodeset, create_nodeset
+from .nodeset import Nodeset, create_nodeset, node_filter_mask
 
 Layer = LayerOneMode | LayerTwoMode
 
@@ -67,6 +67,17 @@ class Network:
             layer_names=self.layer_names + (name,),
         )
 
+    def with_nodeset(self, nodeset: Nodeset) -> "Network":
+        """Swap the nodeset (attribute mutations rebind functionally)."""
+        if nodeset.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"nodeset has {nodeset.n_nodes} nodes, network has "
+                f"{self.n_nodes}"
+            )
+        return Network(
+            nodeset=nodeset, layers=self.layers, layer_names=self.layer_names
+        )
+
     def without_layer(self, name: str) -> "Network":
         i = self.layer_names.index(name)
         return Network(
@@ -97,12 +108,20 @@ class Network:
     def check_edge_any(
         self, u: jnp.ndarray, v: jnp.ndarray,
         layer_names: Sequence[str] | None = None,
+        node_filter=None,
     ) -> jnp.ndarray:
-        """Edge existence across layers of any mode (OR-combined)."""
+        """Edge existence across layers of any mode (OR-combined).
+
+        ``node_filter`` (NodeSelection or bool[n_nodes]) restricts targets:
+        the result is True only when ``v`` passes the filter — "is v, among
+        the selected nodes, connected to u?". Filtered-out pairs skip the
+        bucketed pseudo-projection work entirely.
+        """
         u, v = _as_batch(u), _as_batch(v)
+        nf = node_filter_mask(node_filter, self.n_nodes)
         out = jnp.zeros(u.shape, dtype=bool)
         for layer in self._select(layer_names):
-            out = out | layer.check_edge(u, v)
+            out = out | layer.check_edge(u, v, node_filter=nf)
         return out
 
     def node_alters(
@@ -110,6 +129,7 @@ class Network:
         u: jnp.ndarray,
         max_alters: int,
         layer_names: Sequence[str] | None = None,
+        node_filter=None,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Union of alters across selected layers (mixed modes welcome).
 
@@ -117,11 +137,17 @@ class Network:
         contribute pseudo-projected alters; concrete query batches run
         degree-bucketed per layer (core/dispatch.py) and the cross-layer
         merge goes through the segmented-union dispatch rule.
+
+        ``node_filter`` (NodeSelection or bool[n_nodes]) keeps only alters
+        passing an attribute predicate — the paper's "alters of u in the
+        Workplaces layer where income > X" — applied inside the per-bucket
+        kernels, with the ``max_alters`` cap applying post-filter.
         """
         u = _as_batch(u)
+        nf = node_filter_mask(node_filter, self.n_nodes)
         parts, masks = [], []
         for layer in self._select(layer_names):
-            a, m = layer.node_alters(u, max_alters)
+            a, m = layer.node_alters(u, max_alters, node_filter=nf)
             parts.append(a)
             masks.append(m)
         vals = jnp.concatenate(parts, axis=-1)
@@ -129,14 +155,26 @@ class Network:
         return dispatch.union_rows(vals, mask, max_alters)
 
     def degree(
-        self, u: jnp.ndarray, layer_names: Sequence[str] | None = None
+        self, u: jnp.ndarray, layer_names: Sequence[str] | None = None,
+        node_filter=None,
     ) -> jnp.ndarray:
-        """Summed per-layer degree (two-mode: membership count)."""
+        """Summed per-layer degree (two-mode: membership count).
+
+        With ``node_filter``, the semantics switch to *filtered alter
+        counts*: per layer, the number of neighbors (one-mode) / distinct
+        co-members (two-mode) passing the filter, summed across layers —
+        the count matching the post-filter oracle over per-layer alters.
+        Note an all-True filter therefore differs from the unfiltered
+        degree on two-mode layers (distinct co-members ≠ memberships).
+        """
         u = _as_batch(u)
+        nf = node_filter_mask(node_filter, self.n_nodes)
         total = jnp.zeros(u.shape, dtype=jnp.int32)
         for layer in self._select(layer_names):
-            degs = layer.degrees()
-            total = total + jnp.take(degs, u, mode="clip")
+            if nf is None:
+                total = total + jnp.take(layer.degrees(), u, mode="clip")
+            else:
+                total = total + layer.filtered_degree(u, nf)
         return total
 
     # -- bookkeeping ----------------------------------------------------------

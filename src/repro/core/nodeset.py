@@ -35,6 +35,99 @@ _DEFAULTS = {
     "char": np.uint8(0),
 }
 
+# Selection operators: canonical name -> numpy comparison. Symbolic and
+# word aliases (the CLI accepts both) normalize through _OP_ALIASES.
+_OPS = {
+    "eq": np.equal,
+    "ne": np.not_equal,
+    "lt": np.less,
+    "le": np.less_equal,
+    "gt": np.greater,
+    "ge": np.greater_equal,
+}
+
+_OP_ALIASES = {
+    "==": "eq", "!=": "ne", "<": "lt", "<=": "le", ">": "gt", ">=": "ge",
+    "eq": "eq", "ne": "ne", "lt": "lt", "le": "le", "gt": "gt", "ge": "ge",
+    "has": "has", "exists": "has",
+}
+
+
+class NodeSelection:
+    """A selected set of nodes: dense boolean mask + set algebra.
+
+    Produced by ``Nodeset.select``; composable with ``&`` / ``|`` / ``~``
+    so register-data predicates chain naturally::
+
+        rich = ns.select("income", ">", 50_000)
+        employed = ns.select("employed", "==", True)
+        target = rich & employed
+
+    The mask is a host numpy array (selections drive host-side query
+    planning and induced-subnetwork extraction); ``device_mask`` returns
+    the jnp view for kernels.
+    """
+
+    __slots__ = ("mask",)
+
+    def __init__(self, mask: np.ndarray):
+        self.mask = np.asarray(mask, dtype=bool)
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.mask.shape[0])
+
+    @property
+    def count(self) -> int:
+        return int(self.mask.sum())
+
+    def ids(self) -> np.ndarray:
+        """Selected node ids, ascending int32."""
+        return np.nonzero(self.mask)[0].astype(np.int32)
+
+    def device_mask(self) -> jnp.ndarray:
+        return jnp.asarray(self.mask)
+
+    def __and__(self, other: "NodeSelection") -> "NodeSelection":
+        return NodeSelection(self.mask & _sel_mask(other))
+
+    def __or__(self, other: "NodeSelection") -> "NodeSelection":
+        return NodeSelection(self.mask | _sel_mask(other))
+
+    def __invert__(self) -> "NodeSelection":
+        return NodeSelection(~self.mask)
+
+    def __len__(self) -> int:
+        return self.count
+
+    def __repr__(self) -> str:
+        return f"NodeSelection({self.count}/{self.n_nodes} nodes)"
+
+
+def _sel_mask(sel) -> np.ndarray:
+    if isinstance(sel, NodeSelection):
+        return sel.mask
+    return np.asarray(sel, dtype=bool)
+
+
+def node_filter_mask(node_filter, n_nodes: int):
+    """Normalize a node filter argument to a mask, or pass None through.
+
+    Accepts a NodeSelection, any boolean array-like of shape [n_nodes]
+    (numpy or jnp — traced arrays are returned as-is for jit callers), or
+    None. Raises on a length mismatch when the length is checkable.
+    """
+    if node_filter is None:
+        return None
+    if isinstance(node_filter, NodeSelection):
+        node_filter = node_filter.mask
+    shape = getattr(node_filter, "shape", None)
+    if shape is not None and len(shape) == 1 and shape[0] != n_nodes:
+        raise ValueError(
+            f"node filter has {shape[0]} entries, network has {n_nodes} nodes"
+        )
+    return node_filter
+
 
 @pytree_dataclass(static=("kind",))
 class AttrColumn:
@@ -153,6 +246,56 @@ class Nodeset:
 
     def drop_attr(self, name: str) -> "Nodeset":
         return Nodeset(attrs=self.attrs.without_column(name), n_nodes=self.n_nodes)
+
+    def select(self, name: str, op: str, value=None) -> NodeSelection:
+        """Vectorized attribute predicate -> NodeSelection (paper §3.4).
+
+        ``op`` is one of eq/ne/lt/le/gt/ge (or the symbolic ==, !=, <, <=,
+        >, >=) plus ``has``/``exists`` (value ignored: nodes possessing the
+        attribute at all). Nodes *without* the attribute never match any
+        comparison — including ``ne`` — mirroring SQL NULL semantics; use
+        ``~ns.select(name, "has")`` for the complement of coverage.
+
+        The predicate is evaluated only over the column's k stored entries
+        (one vectorized compare + one scatter), never over all n nodes.
+        """
+        canon = _OP_ALIASES.get(op)
+        if canon is None:
+            raise ValueError(
+                f"unknown selection op {op!r}; use {sorted(set(_OP_ALIASES))}"
+            )
+        col = self.attrs.column(name)
+        ids = np.asarray(col.node_ids)
+        mask = np.zeros(self.n_nodes, dtype=bool)
+        if canon == "has":
+            mask[ids] = True
+            return NodeSelection(mask)
+        vals = np.asarray(col.values)
+        hit = _OPS[canon](vals, _coerce_value(col.kind, value))
+        mask[ids[hit]] = True
+        return NodeSelection(mask)
+
+    def select_ids(self, name: str, op: str, value=None) -> np.ndarray:
+        return self.select(name, op, value).ids()
+
+
+def _coerce_value(kind: str, value):
+    """Coerce a predicate comparison value to the column's compact type."""
+    if value is None:
+        raise ValueError("comparison ops require a value")
+    if kind == "char":
+        if isinstance(value, str):
+            if len(value) != 1:
+                raise ValueError(f"char comparison needs 1 character, got {value!r}")
+            return np.uint8(ord(value))
+        return np.uint8(value)
+    if kind == "bool":
+        if isinstance(value, str):
+            return np.bool_(value.lower() in ("true", "1", "t"))
+        return np.bool_(value)
+    if kind == "int":
+        return np.int32(value)
+    return np.float32(value)
 
 
 def create_nodeset(n_nodes: int) -> Nodeset:

@@ -12,7 +12,10 @@ import numpy as np
 from .csr import CSR
 from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges, two_mode_from_memberships
 
-__all__ = ["symmetrize", "dichotomize", "filter_edges", "subgraph_layer"]
+__all__ = [
+    "symmetrize", "dichotomize", "filter_edges", "subgraph_layer",
+    "induced_subnetwork",
+]
 
 
 def _coo(csr: CSR) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
@@ -104,6 +107,69 @@ def filter_edges(layer: LayerOneMode, min_value: float) -> LayerOneMode:
         directed=layer.directed, allow_self=layer.allow_self,
         store_inbound=layer.store_inbound,
     )
+
+
+def induced_subnetwork(net, selection, orig_id_attr: str = "orig_id"):
+    """Extract the induced subnetwork over a selected nodeset (CLI
+    ``subnetwork``): nodes are re-indexed compactly, every layer keeps only
+    edges/memberships among selected nodes (two-mode: empty hyperedges are
+    dropped and hyperedge ids compacted), and attribute columns are
+    restricted and remapped. The original ids are recorded as an int
+    attribute (``orig_id_attr``; pass None to skip).
+    """
+    from .network import Network, create_network
+    from .nodeset import _sel_mask
+
+    mask = _sel_mask(selection)
+    if mask.shape[0] != net.n_nodes:
+        raise ValueError(
+            f"selection has {mask.shape[0]} entries, network has "
+            f"{net.n_nodes} nodes"
+        )
+    old_ids = np.nonzero(mask)[0]
+    n_new = int(old_ids.size)
+    new_id = np.full(net.n_nodes, -1, dtype=np.int64)
+    new_id[old_ids] = np.arange(n_new)
+
+    sub = create_network(n_new)
+    ns = sub.nodeset
+    for aname, col in zip(net.nodeset.attrs.names, net.nodeset.attrs.columns):
+        ids = np.asarray(col.node_ids)
+        keep = mask[ids]
+        ns = ns.set_attr(
+            aname, col.kind, new_id[ids[keep]], np.asarray(col.values)[keep]
+        )
+    if orig_id_attr is not None:
+        ns = ns.set_attr(
+            orig_id_attr, "int", np.arange(n_new), old_ids.astype(np.int64)
+        )
+    sub = Network(nodeset=ns, layers=(), layer_names=())
+
+    for lname, layer in zip(net.layer_names, net.layers):
+        if isinstance(layer, LayerTwoMode):
+            rows, cols, _ = _coo(layer.memb)
+            keep = mask[rows]
+            rows, cols = new_id[rows[keep]], cols[keep]
+            live_h, cols = np.unique(cols, return_inverse=True)
+            new_layer = two_mode_from_memberships(
+                n_new, max(int(live_h.size), 1), rows, cols
+            )
+        else:
+            rows, cols, vals = _coo(layer.out)
+            keep = mask[rows] & mask[cols]
+            rows, cols = new_id[rows[keep]], new_id[cols[keep]]
+            vals = None if vals is None else vals[keep]
+            if not layer.directed:
+                m = rows <= cols
+                rows, cols = rows[m], cols[m]
+                vals = None if vals is None else vals[m]
+            new_layer = one_mode_from_edges(
+                n_new, rows, cols, values=vals,
+                directed=layer.directed, allow_self=layer.allow_self,
+                store_inbound=layer.store_inbound,
+            )
+        sub = sub.with_layer(lname, new_layer)
+    return sub
 
 
 def subgraph_layer(layer, node_mask: np.ndarray):

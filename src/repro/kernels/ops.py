@@ -120,6 +120,7 @@ def pseudo_node_alters(
     *,
     width_m: int | None = None,
     width_n: int | None = None,
+    node_filter: jnp.ndarray | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -128,6 +129,10 @@ def pseudo_node_alters(
     ``width_m`` / ``width_n`` override the two-hop gather pad widths
     (membership count / hyperedge size); the bucketed dispatcher passes
     per-bucket widths, None means the layer-global maxima.
+
+    ``node_filter`` (bool[n_nodes]) drops gathered co-members failing an
+    attribute predicate *before* the union — the filtered query stays at
+    the same gather width and the ``max_alters`` cap applies post-filter.
     """
     he, he_mask = layer.memberships(u, width_m)
     wn = layer.max_hyperedge_size if width_n is None else max(width_n, 1)
@@ -135,6 +140,8 @@ def pseudo_node_alters(
         layer.members, jnp.where(he_mask, he, 0), wn
     )
     mem_mask = mem_mask & he_mask[..., None]
+    if node_filter is not None:
+        mem_mask = mem_mask & jnp.take(node_filter, mem, mode="clip")
     flat = jnp.where(mem_mask, mem, SENTINEL).reshape(u.shape + (-1,))
     flat = jnp.where(flat == u[..., None], SENTINEL, flat)  # drop ego
     return segmented_union(

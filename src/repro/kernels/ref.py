@@ -42,6 +42,34 @@ def segmented_union_ref(
     return uniq[..., :max_out], mask[..., :max_out]
 
 
+def filtered_alters_ref(
+    vals: jnp.ndarray,
+    mask: jnp.ndarray,
+    node_filter: jnp.ndarray,
+    max_out: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Post-filter oracle for attribute-filtered GetNodeAlters.
+
+    Takes an UNfiltered alters result (``vals``/``mask`` at full width —
+    callers must query with ``max_alters`` large enough that nothing was
+    truncated), drops alters failing ``node_filter`` (bool[n_nodes]), and
+    re-compacts to ``max_out`` sorted-unique entries. The filtered query
+    path must be bit-identical to this.
+    """
+    keep = mask & jnp.take(node_filter, jnp.where(mask, vals, 0), mode="clip")
+    flat = jnp.where(keep, vals, SENTINEL)
+    return segmented_union_ref(flat, max_out)
+
+
+def filtered_degree_ref(
+    vals: jnp.ndarray, mask: jnp.ndarray, node_filter: jnp.ndarray
+) -> jnp.ndarray:
+    """Post-filter oracle for attribute-filtered degree: count the alters
+    of an UNfiltered full-width query that pass ``node_filter``."""
+    keep = mask & jnp.take(node_filter, jnp.where(mask, vals, 0), mode="clip")
+    return jnp.sum(keep, axis=-1).astype(jnp.int32)
+
+
 def attention_ref(
     q: jnp.ndarray,  # (BH, S, D)
     k: jnp.ndarray,  # (BHkv, S, D)

@@ -4,7 +4,7 @@ import json
 
 import pytest
 
-from repro.core.cli import CLIError, Session
+from repro.core.cli import CLIError, Session, _parse_call, _strip_comment
 
 SCRIPT = """
 # paper Listing 2, mini
@@ -72,3 +72,154 @@ def test_unknown_command_raises():
     s = Session()
     with pytest.raises(CLIError):
         s.run_line("frobnicate(x)")
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer regressions: quotes must win over separators
+# ---------------------------------------------------------------------------
+
+
+def test_tokenizer_comma_inside_quotes():
+    """savefile(net, file = "my,file.npz") used to parse as three tokens."""
+    target, cmd, args, kwargs = _parse_call(
+        'savefile(net, file = "my,file.npz")'
+    )
+    assert cmd == "savefile" and args == ["net"]
+    assert kwargs == {"file": "my,file.npz"}
+
+
+def test_tokenizer_semicolon_inside_quotes():
+    """Semicolon list-splitting must skip quoted values."""
+    _, _, _, kwargs = _parse_call('f(x, names = "A;B"; C, s = "x;y")')
+    assert kwargs["names"] == ["A;B", "C"]
+    assert kwargs["s"] == "x;y"
+
+
+def test_tokenizer_equals_and_comment_inside_quotes():
+    _, _, _, kwargs = _parse_call('f(x, s = "a = b")')
+    assert kwargs["s"] == "a = b"
+    assert _strip_comment('f(x, s = "a#b") # note').rstrip() == 'f(x, s = "a#b")'
+
+
+def test_tokenizer_quoted_filename_roundtrip(tmp_path):
+    """End to end: a comma-in-name file saves and loads through the CLI."""
+    s = Session()
+    s.run_script(SCRIPT)
+    path = tmp_path / "my,netfile.npz"
+    s.run_line(f'savefile(net, file = "{path}")')
+    assert path.exists()
+    s.run_line(f'net2 = loadfile(file = "{path}")')
+    assert s.env["net2"].layer_names == s.env["net"].layer_names
+
+
+# ---------------------------------------------------------------------------
+# Command surface (paper §3.4: the 50+-command console, ≥25 here)
+# ---------------------------------------------------------------------------
+
+
+def test_command_surface_at_least_25():
+    cmds = Session.commands()
+    assert len(cmds) >= 25, cmds
+    for required in [
+        "setattr", "getattr", "loadattrs", "selectnodes", "countnodes",
+        "getdegree", "degreedist", "listlayers", "deletelayer",
+        "describenet", "exportlayer", "importlayer", "subnetwork",
+        "samplenodes",
+    ]:
+        assert required in cmds, required
+
+
+ATTR_SCRIPT = SCRIPT + """
+setattr(net, income, nodes = 0;1;2;3;4;5;6;7, values = 10.0;90000.0;55000.0;70000.0;100.0;80000.0;60000.0;75000.0)
+setattr(net, employed, 3, true)
+rich = selectnodes(net, attr = income, op = gt, value = 50000)
+emp = selectnodes(net, attr = employed, op = eq, value = true)
+both = combineselect(rich, emp, op = and)
+countnodes(net, rich)
+getattr(net, income, 1)
+getdegree(net, 1, filter = rich)
+getnodealters(net, 1, layernames = Workplaces; Random, filter = rich)
+listlayers(net)
+describenet(net)
+degreedist(net, layernames = Random)
+sub = subnetwork(net, rich)
+samplenodes(net, 3, seed = 1, filter = rich)
+"""
+
+
+def _run_mode(mode, tmp_path):
+    s = Session(mode=mode)
+    outs = s.run_script(ATTR_SCRIPT)
+    outs.append(s.run_line(f'savefile(sub, file = "{tmp_path}/sub_{mode}.npz")'))
+    s.run_line(f'sub2 = loadfile(file = "{tmp_path}/sub_{mode}.npz")')
+    outs.append(s.run_line("describenet(sub2)"))
+    return s, outs
+
+
+def test_text_json_parity_for_new_commands(tmp_path):
+    """Every new command answers in both modes; JSON is machine-parseable
+    and carries the same payloads the text mode prints."""
+    st, text_outs = _run_mode("text", tmp_path)
+    sj, json_outs = _run_mode("json", tmp_path)
+    assert len(text_outs) == len(json_outs)
+    recs = [json.loads(o) for o in json_outs]
+    by_cmd = {}
+    for r in recs:
+        by_cmd.setdefault(r["command"], []).append(r["result"])
+    assert by_cmd["selectnodes"][0] == {"count": 6}
+    assert by_cmd["countnodes"][0] == 6
+    assert by_cmd["getattr"][0] == 90000.0
+    assert isinstance(by_cmd["getdegree"][0], int)
+    assert isinstance(by_cmd["getnodealters"][0], list)
+    assert by_cmd["subnetwork"][0]["n_nodes"] == 6
+    assert by_cmd["samplenodes"][0] == sorted(by_cmd["samplenodes"][0])
+    assert {l["name"] for l in by_cmd["listlayers"][0]} == {
+        "Random", "Workplaces"
+    }
+    # loaded subnetwork round-trips with layers + attrs intact
+    desc = by_cmd["describenet"][-1]
+    assert desc["n_nodes"] == 6
+    assert {a["name"] for a in desc["attrs"]} >= {"income", "orig_id"}
+    # text mode emitted something printable for each
+    assert all(isinstance(o, str) and o for o in text_outs)
+
+
+def test_cli_filtered_alters_match_engine(tmp_path):
+    """CLI filtered getnodealters == api-level filtered query."""
+    import numpy as np
+    from repro.core import api
+
+    s = Session()
+    s.run_script(ATTR_SCRIPT)
+    net, rich = s.env["net"], s.env["rich"]
+    out = s.run_line("getnodealters(net, 1, filter = rich)")
+    want = np.asarray(
+        api.getnodealters(net, 1, node_filter=rich)
+    ).tolist()
+    assert json.loads(out.replace("'", '"')) == want
+
+
+def test_cli_loadattrs_and_import_export(tmp_path):
+    attrs = tmp_path / "attrs.tsv"
+    attrs.write_text(
+        "node\tincome:float\temployed:bool\n"
+        "0\t10.5\ttrue\n"
+        "1\t\tfalse\n"     # income absent for node 1 (sparse)
+        "2\t99.0\t\n"
+    )
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    out = json.loads(s.run_line(f'loadattrs(net, file = "{attrs}")'))
+    assert set(out["result"]["loaded"]) == {"income", "employed"}
+    got = json.loads(s.run_line("getattr(net, income, nodes = 0;1;2)"))
+    assert got["result"] == [10.5, None, 99.0]
+    # export a layer, delete it, re-import it
+    edges = tmp_path / "rand.tsv"
+    s.run_line(f'exportlayer(net, Random, file = "{edges}")')
+    s.run_line("deletelayer(net, Random)")
+    assert json.loads(s.run_line("listlayers(net)"))["result"][0]["name"] == (
+        "Workplaces"
+    )
+    s.run_line(f'importlayer(net, Random, file = "{edges}")')
+    names = {l["name"] for l in json.loads(s.run_line("listlayers(net)"))["result"]}
+    assert names == {"Random", "Workplaces"}

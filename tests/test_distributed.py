@@ -63,8 +63,8 @@ def losses(policy, n=4):
             out.append(float(l))
     return out
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 pol = MeshPolicy(mesh=mesh, dp=("data",), tp="model")
 sharded = losses(pol)
 single = losses(MeshPolicy())
@@ -89,8 +89,8 @@ from repro.train.checkpoint import save_checkpoint
 
 cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128)
 model = Model(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 pol = MeshPolicy(mesh=mesh, dp=("data",), tp="model")
 with use_policy(pol):
     params = model.init(jax.random.PRNGKey(7))
@@ -113,8 +113,8 @@ from repro.train.checkpoint import latest_checkpoint, restore_checkpoint
 
 cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128)
 model = Model(cfg)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 2), ("data", "model"))
 pol = MeshPolicy(mesh=mesh, dp=("data",), tp="model")
 with use_policy(pol):
     template = model.init(jax.random.PRNGKey(0))
@@ -147,8 +147,8 @@ from repro.data.pipeline import synthetic_batch_at
 
 cfg = get_config("mamba2-130m").reduced()
 model = Model(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 pol = MeshPolicy(mesh=mesh, dp=("data", "model"), tp=None)
 with use_policy(pol):
     params = model.init(jax.random.PRNGKey(0))

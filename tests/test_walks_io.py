@@ -15,7 +15,7 @@ from repro.core import (
     save_network,
     two_mode_from_memberships,
 )
-from repro.core.io import export_layer_tsv, import_layer_tsv
+from repro.core.io import export_layer_tsv, import_layer_tsv, load_attrs_tsv
 
 
 def _line_net():
@@ -148,3 +148,54 @@ def test_tsv_two_mode_roundtrip(tmp_path):
     np.testing.assert_array_equal(
         np.asarray(back.check_edge(jnp.array([0]), jnp.array([1]))), [True]
     )
+
+
+def test_tsv_valued_import_missing_value_raises(tmp_path):
+    """Regression: a valued import with a short row used to silently attach
+    later values to the wrong edges (vals list shorter than edge list)."""
+    p = tmp_path / "bad.tsv"
+    p.write_text("0\t1\t1.5\n1\t2\n2\t3\t3.5\n")
+    with pytest.raises(ValueError, match="no value column"):
+        import_layer_tsv(p, 6, mode=1, valued=True)
+
+
+def test_tsv_valued_import_default_fills(tmp_path):
+    p = tmp_path / "gaps.tsv"
+    p.write_text("0\t1\t1.5\n1\t2\n2\t3\t3.5\n")
+    layer = import_layer_tsv(p, 6, mode=1, valued=True, default_value=9.0)
+    got = np.asarray(
+        layer.edge_value(jnp.array([0, 1, 2]), jnp.array([1, 2, 3]))
+    )
+    # the 3.5 stays on edge (2,3) — no misalignment — and the gap gets 9.0
+    np.testing.assert_allclose(got, [1.5, 9.0, 3.5])
+
+
+def test_load_attrs_tsv_header_format(tmp_path):
+    p = tmp_path / "attrs.tsv"
+    p.write_text(
+        "node\tincome:float\temployed:bool\tsex:char\tyear:int\n"
+        "0\t10.5\ttrue\tf\t1980\n"
+        "1\t\tfalse\tm\t\n"
+        "2\t99.0\t\t\t2001\n"
+    )
+    cols = {name: (kind, ids.tolist(), vals.tolist())
+            for name, kind, ids, vals in load_attrs_tsv(p)}
+    assert cols["income"] == ("float", [0, 2], [10.5, 99.0])
+    assert cols["employed"] == ("bool", [0, 1], [True, False])
+    assert cols["sex"] == ("char", [0, 1], [ord("f"), ord("m")])
+    assert cols["year"] == ("int", [0, 2], [1980, 2001])
+
+
+def test_load_attrs_tsv_two_column_and_errors(tmp_path):
+    p = tmp_path / "inc.tsv"
+    p.write_text("3\t10\n7\t20\n")
+    [(name, kind, ids, vals)] = load_attrs_tsv(p, name="income", kind="int")
+    assert (name, kind, ids.tolist(), vals.tolist()) == (
+        "income", "int", [3, 7], [10, 20]
+    )
+    with pytest.raises(ValueError, match="pass name= and kind="):
+        load_attrs_tsv(p)
+    bad = tmp_path / "bad.tsv"
+    bad.write_text("node\tincome:complex\n0\t1\n")
+    with pytest.raises(ValueError, match="unknown attribute kind"):
+        load_attrs_tsv(bad)

@@ -27,9 +27,12 @@ import jax.numpy as jnp
 
 SCALE = float(os.environ.get("BENCH_SCALE", "1"))
 N_NODES = int(100_000 * SCALE)
+# --smoke (CI bit-rot check): tiny sizes, minimal iterations, same code paths.
+SMOKE = False
 ROWS: list[str] = []
 RESULTS: dict[str, float] = {}  # bench_name -> us_per_call (BENCH_1.json)
 RESULTS_FILTERED: dict[str, float] = {}  # filtered workload (BENCH_2.json)
+RESULTS_TRAVERSAL: dict[str, float] = {}  # traversal workload (BENCH_4.json)
 
 
 def emit(
@@ -41,8 +44,15 @@ def emit(
     print(row)
 
 
+def _b(n: int, smoke_n: int = 128) -> int:
+    """Batch-size knob: full size normally, tiny under --smoke."""
+    return min(n, smoke_n) if SMOKE else n
+
+
 def _timeit(fn, *args, n_warmup=2, n_iter=5) -> float:
     """Median wall time per call in µs (blocks on jax outputs)."""
+    if SMOKE:
+        n_warmup, n_iter = 1, min(n_iter, 2)
     for _ in range(n_warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -99,7 +109,7 @@ def query_perf(net) -> None:
     from repro.kernels import ops as kops
 
     rng = np.random.default_rng(0)
-    B = 4096
+    B = _b(4096)
     u = jnp.asarray(rng.integers(0, net.n_nodes, B), jnp.int32)
     v = jnp.asarray(rng.integers(0, net.n_nodes, B), jnp.int32)
     wk = net.layer("Workplaces")
@@ -169,7 +179,7 @@ def query_perf_skewed() -> None:
     )
 
     # -- edge_value ---------------------------------------------------------
-    B = 4096
+    B = _b(4096)
     u = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
     v = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
     padded = jax.jit(lambda a, b: layer.edge_value_padded(a, b))
@@ -186,7 +196,7 @@ def query_perf_skewed() -> None:
     )
 
     # -- node_alters --------------------------------------------------------
-    B = 256
+    B = _b(256, 32)
     max_alters = 512
     ua = jnp.asarray(rng.integers(0, layer.n_nodes, B), jnp.int32)
     padded_a = jax.jit(lambda a: layer.node_alters_padded(a, max_alters))
@@ -230,7 +240,7 @@ def query_perf_filtered() -> None:
     )
 
     # -- getedge under a target filter ---------------------------------------
-    B = 4096
+    B = _b(4096)
     u = jnp.asarray(rng.integers(0, n, B), jnp.int32)
     v = jnp.asarray(rng.integers(0, n, B), jnp.int32)
     padded = jax.jit(
@@ -251,7 +261,7 @@ def query_perf_filtered() -> None:
          results=RESULTS_FILTERED)
 
     # -- getnodealters under an alter filter ---------------------------------
-    B = 256
+    B = _b(256, 32)
     max_alters = 512
     ua = jnp.asarray(rng.integers(0, n, B), jnp.int32)
     padded_a = jax.jit(
@@ -301,7 +311,7 @@ def kernel_intersect_skewed() -> None:
     from repro.kernels import ref
 
     rng = np.random.default_rng(3)
-    B = 8192
+    B = _b(8192, 256)
     lens = np.clip((3 * (rng.pareto(1.3, B) + 1)).astype(np.int64), 1, 512)
     lens[0] = 512  # one hub row pins the global width
     K = int(lens.max())
@@ -339,6 +349,107 @@ def kernel_intersect_skewed() -> None:
     )
 
 
+def traversal_perf() -> None:
+    """Batched multi-source traversal (BENCH_4.json rows).
+
+    The threadleR workload: k-hop neighborhoods for 1k sources at once on
+    the skewed power-law affiliation layer. The baseline is what an engine
+    without batched traversal does — a Python loop dispatching one source
+    at a time. The batched path dedups each hop's frontier across the
+    whole batch (hub co-members expand once) and compacts next frontiers
+    with the sort-free frontier kernel; rows are asserted bit-identical to
+    the per-source loop AND the frontier_ref oracle. Target: >= 10x.
+    """
+    from repro.core import create_network, khop_neighborhood
+    from repro.core.traversal import _frontier_alters, components_batched
+    from repro.kernels import ops as kops, ref
+
+    layer = build_skewed_two_mode()
+    net = create_network(layer.n_nodes).with_layer("aff", layer)
+    rng = np.random.default_rng(11)
+    B = _b(1000, 64)
+    k = 2
+    cap = 256       # per-hop frontier cap (both paths)
+    node_cap = 128  # per-node alter gather cap (both paths)
+    sources = jnp.asarray(rng.integers(0, net.n_nodes, B), jnp.int32)
+    derived_base = f"sources={B};k={k};max_frontier={cap};node_cap={node_cap}"
+
+    def batched(s):
+        return khop_neighborhood(
+            net, s, k, max_frontier=cap, max_alters_per_node=node_cap
+        )
+
+    us_bat = _timeit(batched, sources, n_warmup=1, n_iter=3)
+
+    def per_source_loop(s):
+        return [
+            khop_neighborhood(
+                net, s[i : i + 1], k, max_frontier=cap,
+                max_alters_per_node=node_cap,
+            )
+            for i in range(s.shape[0])
+        ]
+
+    jax.block_until_ready([o[0] for o in per_source_loop(sources[:8])])
+    t0 = time.perf_counter()
+    loop_out = per_source_loop(sources)
+    jax.block_until_ready([o[0] for o in loop_out])
+    us_loop = (time.perf_counter() - t0) * 1e6
+
+    # bit-identity: every batched row == its per-source row
+    bn, bm, _ = batched(sources)
+    bn, bm = np.asarray(bn), np.asarray(bm)
+    for i, (n_i, m_i, _) in enumerate(loop_out):
+        np.testing.assert_array_equal(bn[i], np.asarray(n_i)[0])
+        np.testing.assert_array_equal(bm[i], np.asarray(m_i)[0])
+
+    # bit-identity of the frontier compaction step vs its oracle
+    cand = _frontier_alters(net, sources[:, None], None, None, node_cap)
+    kv, km = kops.frontier_compact(
+        cand, sources[:, None], cap, use_pallas=True, interpret=True
+    )
+    rv, rm = ref.frontier_ref(cand, sources[:, None], cap)
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+    speedup = us_loop / us_bat
+    emit("traversal/khop_per_source_loop", us_loop / B,
+         f"batch={B};{derived_base}", results=RESULTS_TRAVERSAL)
+    emit("traversal/khop_batched", us_bat / B,
+         f"batch={B};{derived_base};speedup={speedup:.1f}x;bit_identical=1",
+         results=RESULTS_TRAVERSAL)
+    if not SMOKE:
+        assert speedup >= 10.0, (
+            f"batched k-hop speedup {speedup:.1f}x below the 10x target"
+        )
+
+    # ego batches + walk fleet + components on the same workload
+    def ego(s):
+        return net.ego_batch(s, 256, k=2, max_alters_per_node=node_cap)
+
+    us_ego = _timeit(ego, sources, n_warmup=1, n_iter=3)
+    emit("traversal/ego_batch_k2", us_ego / B,
+         f"batch={B};max_alters=256", results=RESULTS_TRAVERSAL)
+
+    from repro.core import random_walk_batch
+
+    W, steps = 4, _b(32, 8)
+    walk = jax.jit(
+        lambda s, key: random_walk_batch(
+            net, s, steps, key, walkers_per_start=W
+        )
+    )
+    us_walk = _timeit(walk, sources, jax.random.PRNGKey(0))
+    rate = B * W * steps / (us_walk / 1e6)
+    emit("traversal/walk_fleet", us_walk / (B * W * steps),
+         f"walkers={B * W};steps={steps};steps_per_s={rate:.0f}",
+         results=RESULTS_TRAVERSAL)
+
+    us_cc = _timeit(lambda: components_batched(net), n_warmup=1, n_iter=3)
+    emit("traversal/components_batched", us_cc,
+         f"n_nodes={net.n_nodes}", results=RESULTS_TRAVERSAL)
+
+
 def shortest_path(net) -> None:
     from repro.core import shortest_path_length
 
@@ -356,7 +467,7 @@ def shortest_path(net) -> None:
 def walk_throughput(net) -> None:
     from repro.core import random_walk
 
-    B, steps = 8192, 64
+    B, steps = _b(8192, 256), _b(64, 8)
     walk = jax.jit(
         lambda s, k: random_walk(net, s, steps, k)
     )
@@ -371,7 +482,7 @@ def kernel_intersect() -> None:
     from repro.kernels import ops as kops, ref
 
     rng = np.random.default_rng(0)
-    B, K = 8192, 64
+    B, K = _b(8192, 256), 64
     a = np.sort(rng.integers(0, 10_000, (B, K)).astype(np.int32), axis=1)
     b = np.sort(rng.integers(0, 10_000, (B, K)).astype(np.int32), axis=1)
     aj, bj = jnp.asarray(a), jnp.asarray(b)
@@ -398,25 +509,46 @@ def roofline() -> None:
 
 
 def write_bench_json(results=None, path: str | None = None) -> str:
-    """Machine-readable {bench_name: us_per_call} for cross-PR tracking."""
+    """Machine-readable {bench_name: us_per_call} for cross-PR tracking.
+
+    Under --smoke the tiny-size timings are meaningless, so they go to
+    ``*_smoke.json`` sidecars — the git-tracked full-scale records are
+    never clobbered by the CI bit-rot check (or a local smoke run).
+    """
     import json
     from pathlib import Path
 
     results = RESULTS if results is None else results
     out = Path(path) if path else Path(__file__).parent / "BENCH_1.json"
+    if SMOKE:
+        out = out.with_name(f"{out.stem}_smoke{out.suffix}")
     out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
     return str(out)
 
 
 def main() -> None:
+    import argparse
     from pathlib import Path
 
-    print(f"# benchmark network: {N_NODES:,} nodes (BENCH_SCALE={SCALE})")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny sizes / minimal iterations — CI bit-rot check",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        global SMOKE, N_NODES
+        SMOKE = True
+        N_NODES = min(N_NODES, 5_000)
+
+    print(f"# benchmark network: {N_NODES:,} nodes "
+          f"(BENCH_SCALE={SCALE}, smoke={SMOKE})")
     net = build_benchmark_network()
     table1_memory(net)
     query_perf(net)
     query_perf_skewed()
     query_perf_filtered()
+    traversal_perf()
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
@@ -427,6 +559,7 @@ def main() -> None:
         print(f"# roofline skipped: {e}")
     print(f"# wrote {write_bench_json()}")
     print(f"# wrote {write_bench_json(RESULTS_FILTERED, Path(__file__).parent / 'BENCH_2.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_TRAVERSAL, Path(__file__).parent / 'BENCH_4.json')}")
 
 
 if __name__ == "__main__":

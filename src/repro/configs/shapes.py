@@ -10,7 +10,7 @@
 
 from dataclasses import dataclass
 
-from . import all_arch_names, get_config
+from . import all_arch_names
 
 
 @dataclass(frozen=True)

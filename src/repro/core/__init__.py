@@ -51,6 +51,12 @@ from .processing import (
     symmetrize,
 )
 from .projection import project_two_mode, projection_nbytes
+from .traversal import (
+    components_batched,
+    ego_batch,
+    khop_neighborhood,
+    random_walk_batch,
+)
 from .walks import ego_sample, neighborhood_sample, random_walk
 from .memory import memory_report
 from .io import load_network, save_network
@@ -71,6 +77,8 @@ __all__ = [
     "dichotomize", "filter_edges", "induced_subnetwork", "subgraph_layer",
     "symmetrize",
     "project_two_mode", "projection_nbytes",
+    "components_batched", "ego_batch", "khop_neighborhood",
+    "random_walk_batch",
     "ego_sample", "neighborhood_sample", "random_walk",
     "memory_report",
     "load_network", "save_network",

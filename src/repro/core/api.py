@@ -52,6 +52,8 @@ __all__ = [
     "selectnodes", "countnodes", "attributesummary",
     # degree / structure queries
     "getdegree", "degreedist", "getdensity", "countcomponents",
+    # batched traversal
+    "khop", "egosample", "walkbatch", "componentsfast",
     # container surface
     "listlayers", "deletelayer", "describenet",
     "exportlayer", "importlayer", "subnetwork", "samplenodes",
@@ -273,10 +275,97 @@ def getdensity(net: Network, layer: str) -> float:
 
 
 def countcomponents(
-    net: Network, layernames: Sequence[str] | None = None
+    net: Network, layernames: Sequence[str] | None = None, node_filter=None
 ) -> int:
-    labels = np.asarray(connected_components(net, layernames))
+    """Component count; ``node_filter`` restricts to the induced selection
+    (filtered-out nodes count as singletons)."""
+    labels = np.asarray(
+        connected_components(net, layernames, node_filter=node_filter)
+    )
     return int(np.unique(labels).size)
+
+
+# ---------------------------------------------------------------------------
+# Batched traversal (core/traversal.py — the threadleR workload surface)
+# ---------------------------------------------------------------------------
+
+
+def khop(
+    net: Network, sources, k: int,
+    layernames: Sequence[str] | None = None,
+    max_frontier: int | None = None, node_filter=None,
+) -> list[dict]:
+    """CLI ``khop``: k-hop neighborhoods for a batch of sources.
+
+    Returns one record per source: ``{"source", "count", "nodes", "hops"}``
+    with ``nodes`` the reached ids (source excluded) grouped by hop order
+    and ``hops`` the matching hop index per id.
+    """
+    src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    nodes, mask, hop_of_slot = net.khop(
+        jnp.asarray(src, jnp.int32), int(k), max_frontier=max_frontier,
+        layer_names=layernames, node_filter=node_filter,
+    )
+    nodes = np.asarray(nodes)
+    mask = np.asarray(mask)
+    hops = np.asarray(hop_of_slot)
+    out = []
+    for i, s in enumerate(src):
+        keep = mask[i] & (hops > 0)  # drop the source slot
+        out.append({
+            "source": int(s),
+            "count": int(keep.sum()),
+            "nodes": nodes[i][keep].tolist(),
+            "hops": hops[keep].tolist(),
+        })
+    return out
+
+
+def egosample(
+    net: Network, egos, max_alters: int = 4096, k: int = 1,
+    layernames: Sequence[str] | None = None, node_filter=None,
+) -> list[list[int]]:
+    """CLI ``egosample``: batched (k-hop) ego networks, one sorted-unique
+    alter list per ego (deduped — each alter appears once)."""
+    ids = np.atleast_1d(np.asarray(egos, dtype=np.int64))
+    vals, mask = net.ego_batch(
+        jnp.asarray(ids, jnp.int32), int(max_alters), k=int(k),
+        layer_names=layernames, node_filter=node_filter,
+    )
+    vals = np.asarray(vals)
+    mask = np.asarray(mask)
+    return [vals[i][mask[i]].tolist() for i in range(ids.size)]
+
+
+def walkbatch(
+    net: Network, starts, steps: int, walkers: int = 1, seed: int = 0,
+    layernames: Sequence[str] | None = None,
+    layer_weights: Sequence[float] | None = None, node_filter=None,
+) -> list[list[int]]:
+    """CLI ``walkbatch``: a walk fleet — ``walkers`` walkers per start
+    node, one path row each (see traversal.random_walk_batch)."""
+    from .traversal import random_walk_batch
+
+    paths = random_walk_batch(
+        net, jnp.asarray(np.atleast_1d(np.asarray(starts, np.int64)),
+                         jnp.int32),
+        int(steps), jax.random.PRNGKey(int(seed)),
+        walkers_per_start=int(walkers), layer_names=layernames,
+        layer_weights=layer_weights, node_filter=node_filter,
+    )
+    return np.asarray(paths).tolist()
+
+
+def componentsfast(
+    net: Network, layernames: Sequence[str] | None = None, node_filter=None
+) -> int:
+    """CLI ``componentsfast``: filter-aware component count.
+
+    ``connected_components`` itself now runs the pointer-jumping label
+    propagation (traversal.components_batched), so this is
+    ``countcomponents`` plus the ``node_filter`` surface the legacy
+    ``components`` command predates."""
+    return countcomponents(net, layernames, node_filter=node_filter)
 
 
 # ---------------------------------------------------------------------------

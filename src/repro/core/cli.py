@@ -114,7 +114,11 @@ def _parse_call(line: str):
             else:
                 kwargs[k] = _parse_value(v)
         else:
-            args.append(_parse_value(tok))
+            parts = _split_outside_quotes(tok, ";")
+            if len(parts) > 1:  # positional i; j; k lists (khop, walkbatch)
+                args.append([_parse_value(x) for x in parts])
+            else:
+                args.append(_parse_value(tok))
     return target, cmd, args, kwargs
 
 
@@ -346,6 +350,46 @@ class Session:
     def _cmd_components(self, net, *, layernames=None):
         return api.countcomponents(net, layernames=_names(layernames)), None
 
+    # -- batched traversal (paper §5 / threadleR workloads) -------------------
+
+    def _cmd_khop(self, net, nodes, *, k, layernames=None, maxfrontier=None,
+                  filter=None):
+        return api.khop(
+            net, _ids(nodes), int(k), layernames=_names(layernames),
+            max_frontier=None if maxfrontier is None else int(maxfrontier),
+            node_filter=self._node_filter(filter),
+        ), None
+
+    def _cmd_egosample(self, net, egos, *, max_alters=4096, k=1,
+                       layernames=None, filter=None):
+        return api.egosample(
+            net, _ids(egos), max_alters=int(max_alters), k=int(k),
+            layernames=_names(layernames),
+            node_filter=self._node_filter(filter),
+        ), None
+
+    def _cmd_walkbatch(self, net, starts, *, steps, walkers=1, seed=0,
+                       layernames=None, layerweights=None, filter=None):
+        weights = None
+        if layerweights is not None:
+            weights = [
+                float(w) for w in (
+                    layerweights if isinstance(layerweights, list)
+                    else [layerweights]
+                )
+            ]
+        return api.walkbatch(
+            net, _ids(starts), steps=int(steps), walkers=int(walkers),
+            seed=int(seed), layernames=_names(layernames),
+            layer_weights=weights, node_filter=self._node_filter(filter),
+        ), None
+
+    def _cmd_componentsfast(self, net, *, layernames=None, filter=None):
+        return api.componentsfast(
+            net, layernames=_names(layernames),
+            node_filter=self._node_filter(filter),
+        ), None
+
     # -- container surface ----------------------------------------------------
 
     def _cmd_listlayers(self, net):
@@ -401,6 +445,11 @@ class Session:
         return sorted(
             m[len("_cmd_"):] for m in dir(cls) if m.startswith("_cmd_")
         )
+
+
+def _ids(nodes) -> list[int]:
+    """Normalize a CLI node-id value (bare id or i; j; k list) to ints."""
+    return [int(n) for n in (nodes if isinstance(nodes, list) else [nodes])]
 
 
 def _names(layernames) -> list[str] | None:

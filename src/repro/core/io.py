@@ -9,7 +9,6 @@ membership lists (``.tsv`` / ``.tsv.gz``).
 from __future__ import annotations
 
 import gzip
-import io as _io
 import json
 from pathlib import Path
 
@@ -19,7 +18,7 @@ import jax.numpy as jnp
 from .csr import CSR
 from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges, two_mode_from_memberships
 from .network import Network, create_network
-from .nodeset import AttrColumn, AttributeStore, Nodeset
+from .nodeset import AttrColumn, Nodeset
 
 __all__ = [
     "save_network",

@@ -14,15 +14,12 @@ through jit / pjit unchanged.
 
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Sequence
 
-import numpy as np
-import jax
 import jax.numpy as jnp
 
 from . import dispatch
 from .pytree import pytree_dataclass
-from .csr import SENTINEL
 from .layers import LayerOneMode, LayerTwoMode
 from .nodeset import Nodeset, create_nodeset, node_filter_mask
 
@@ -176,6 +173,53 @@ class Network:
             else:
                 total = total + layer.filtered_degree(u, nf)
         return total
+
+    # -- batched traversal (core/traversal.py) -------------------------------
+
+    def khop(
+        self,
+        sources: jnp.ndarray,
+        k: int,
+        *,
+        max_frontier: int | None = None,
+        max_alters_per_node: int | None = None,
+        layer_names: Sequence[str] | None = None,
+        node_filter=None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Batched k-hop neighborhoods -> (nodes, mask, hop_of_slot).
+
+        Frontier-based multi-source BFS through the degree-bucketed
+        dispatch — see ``traversal.khop_neighborhood`` for the layout
+        (slot 0 = source, then k sorted hop groups of ``max_frontier``)."""
+        from .traversal import khop_neighborhood
+
+        return khop_neighborhood(
+            self, sources, k, max_frontier=max_frontier,
+            max_alters_per_node=max_alters_per_node,
+            layer_names=layer_names, node_filter=node_filter,
+        )
+
+    def ego_batch(
+        self,
+        egos: jnp.ndarray,
+        max_alters: int,
+        *,
+        k: int = 1,
+        max_alters_per_node: int | None = None,
+        layer_names: Sequence[str] | None = None,
+        node_filter=None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched k-hop ego networks -> (int32[B, max_alters], dedup mask).
+
+        Sorted-unique alters within k hops of each ego (ego excluded);
+        every alter appears once however many paths reach it."""
+        from .traversal import ego_batch
+
+        return ego_batch(
+            self, egos, max_alters, k=k,
+            max_alters_per_node=max_alters_per_node,
+            layer_names=layer_names, node_filter=node_filter,
+        )
 
     # -- bookkeeping ----------------------------------------------------------
 

@@ -16,7 +16,6 @@ costs 0 bytes in a column it has no value in.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from .pytree import pytree_dataclass

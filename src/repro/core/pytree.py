@@ -9,7 +9,7 @@ be donated. Static (non-array) configuration fields are declared via the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, TypeVar
+from typing import Any, TypeVar
 
 import jax
 

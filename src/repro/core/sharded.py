@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .csr import SENTINEL, csr_from_coo
+from .csr import SENTINEL
 from .layers import LayerTwoMode
 from .pytree import pytree_dataclass
 

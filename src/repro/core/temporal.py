@@ -22,7 +22,6 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import numpy as np
 import jax.numpy as jnp
 
 from .memory import memory_report

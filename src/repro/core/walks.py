@@ -17,7 +17,6 @@ Walk output feeds the LM data pipeline (repro.data.walk_corpus).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -25,7 +24,12 @@ import jax.numpy as jnp
 
 from .network import Network
 
-__all__ = ["random_walk", "ego_sample", "neighborhood_sample"]
+__all__ = [
+    "random_walk",
+    "random_walk_batch",
+    "ego_sample",
+    "neighborhood_sample",
+]
 
 
 def _layer_logits(
@@ -51,41 +55,24 @@ def random_walk(
 ) -> jnp.ndarray:
     """Batched multilayer random walk -> int32[B, n_steps + 1].
 
-    Walkers with no valid move stay in place (dangling nodes).
-    """
-    layers = net._select(layer_names)
-    logits = _layer_logits(len(layers), layer_weights)
+    Walkers with no valid move stay in place (dangling nodes). One walker
+    per start node — the single shared scan implementation lives in
+    ``traversal.random_walk_batch`` (this is the W=1, unfiltered case)."""
+    from .traversal import random_walk_batch as _rwb
 
-    step_fns = [
-        lambda u, k, layer=layer: layer.sample_neighbor(u, k)[0]
-        for layer in layers
-    ]
+    return _rwb(
+        net, start_nodes, n_steps, key,
+        layer_names=layer_names, layer_weights=layer_weights,
+    )
 
-    start = jnp.asarray(start_nodes, dtype=jnp.int32)
 
-    def one_step(carry, _):
-        u, k = carry
-        k, k_layer, k_step = jax.random.split(k, 3)
-        if len(layers) == 1:
-            v = step_fns[0](u, k_step)
-        else:
-            # logits precomputed outside the scan body (hoisted log)
-            choice = jax.random.categorical(
-                k_layer, logits, shape=u.shape
-            )
-            # lax.switch needs a scalar branch index; walkers choose layers
-            # independently, so evaluate each layer's step and select.
-            # (len(layers) is small and static; per-walker switch would
-            # serialize the batch.)
-            keys = jax.random.split(k_step, len(layers))
-            candidates = jnp.stack(
-                [fn(u, kk) for fn, kk in zip(step_fns, keys)], axis=0
-            )
-            v = jnp.take_along_axis(candidates, choice[None, :], axis=0)[0]
-        return (v, k), v
+def random_walk_batch(net: Network, *args, **kwargs) -> jnp.ndarray:
+    """Walk fleet: W walkers per start in one scan, honoring
+    ``layer_weights`` and ``node_filter`` — see traversal.random_walk_batch
+    (re-exported here so walk workloads import from one module)."""
+    from .traversal import random_walk_batch as _rwb
 
-    (_, _), path = jax.lax.scan(one_step, (start, key), None, length=n_steps)
-    return jnp.concatenate([start[None], path], axis=0).T  # (B, n_steps+1)
+    return _rwb(net, *args, **kwargs)
 
 
 def ego_sample(
@@ -93,9 +80,20 @@ def ego_sample(
     egos: jnp.ndarray,
     max_alters: int,
     layer_names: Sequence[str] | None = None,
+    k: int = 1,
+    node_filter=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Ego-network extraction: padded alters across layers (mixed modes)."""
-    return net.node_alters(egos, max_alters, layer_names)
+    """Ego-network extraction: padded alters across layers (mixed modes).
+
+    ``k`` extends the ego net to k hops through the batched frontier BFS;
+    alters reached via several paths/hops are deduped (each id appears
+    once — hub-adjacent nodes are not over-represented)."""
+    from .traversal import ego_batch
+
+    return ego_batch(
+        net, egos, max_alters, k=k, layer_names=layer_names,
+        node_filter=node_filter,
+    )
 
 
 def neighborhood_sample(
@@ -118,36 +116,56 @@ def neighborhood_sample(
 
     ``method="alters"``: each hop gathers the multilayer alter set
     (degree-bucketed dispatch on concrete frontiers — core/dispatch.py)
-    and draws fanout samples uniformly from it. The set is capped at
-    ``max_alters_per_hop`` *smallest-id* alters, so sampling is uniform
-    over the full neighborhood only when the cap covers the largest
-    projected degree in the frontier — raise it for hub-heavy graphs.
-    ``layer_weights`` does not apply (the alter set is a cross-layer union).
+    of the seed's whole frontier, dedups it (union across the frontier —
+    a hub reachable from several frontier nodes appears ONCE, so
+    hub-adjacent nodes are not over-represented), and draws the hop's
+    samples uniformly from that union. Each frontier node contributes at
+    most ``max_alters_per_hop`` *smallest-id* alters, so sampling is
+    uniform over the full neighborhood only when the cap covers the
+    largest projected degree in the frontier — raise it for hub-heavy
+    graphs. ``layer_weights`` does not apply (the alter set is a
+    cross-layer union).
     """
+    from . import dispatch
+
     if method not in ("walk", "alters"):
         raise ValueError(f"unknown method {method!r}; use 'walk' or 'alters'")
     layers = net._select(layer_names)
     logits = _layer_logits(len(layers), layer_weights)
     frontier = jnp.asarray(seeds, dtype=jnp.int32)
+    if frontier.ndim == 0:
+        frontier = frontier[None]
+    B = frontier.shape[0] if frontier.ndim == 1 else None
     hops = []
     for f in fanout:
         key, k_layer, k_step = jax.random.split(key, 3)
         if method == "alters":
+            # 2D view (B seeds, F frontier nodes each) so the union is
+            # per seed, not per duplicated frontier entry
+            f2d = frontier.reshape(B, -1) if B is not None else frontier
+            F = f2d.shape[-1]
             alters, amask = net.node_alters(
-                frontier, max_alters_per_hop, layer_names
+                f2d.reshape(-1), max_alters_per_hop, layer_names
             )
-            counts = jnp.sum(amask, axis=-1)
+            uni, umask = dispatch.union_rows(
+                alters.reshape(f2d.shape[:-1] + (F * max_alters_per_hop,)),
+                amask.reshape(f2d.shape[:-1] + (F * max_alters_per_hop,)),
+                F * max_alters_per_hop,
+            )
+            counts = jnp.sum(umask, axis=-1)
             r = jax.random.randint(
-                k_step, frontier.shape + (f,), 0,
+                k_step, f2d.shape[:-1] + (F * f,), 0,
                 jnp.maximum(counts, 1)[..., None],
             )
-            picked = jnp.take_along_axis(alters, r, axis=-1)
-            picked = jnp.where(  # dangling frontier nodes stay in place
-                counts[..., None] > 0, picked, frontier[..., None]
+            picked = jnp.take_along_axis(uni, r, axis=-1)
+            picked = jnp.where(  # seeds with no alters stay in place
+                counts[..., None] > 0,
+                picked,
+                jnp.repeat(f2d, f, axis=-1),
             )
-            nxt = picked.reshape(
-                frontier.shape[:-1] + (frontier.shape[-1] * f,)
-            ).astype(jnp.int32)
+            nxt = picked.astype(jnp.int32)
+            if B is not None:
+                nxt = nxt.reshape(-1)
             hops.append(nxt)
             frontier = nxt
             continue

@@ -18,11 +18,9 @@ pure-LM benchmarking.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Iterator
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -9,14 +9,14 @@ runtime concern, not a sharding concern).
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csr import SENTINEL, csr_row_gather, on_tpu as _on_tpu
+from repro.core.csr import (
+    SENTINEL, csr_row_gather, on_tpu as _on_tpu, sorted_isin,
+)
 from . import ref
+from .frontier import frontier_kernel
 from .intersect import intersect_count_kernel
 from .segmented_union import segmented_union_kernel
 from .flash_attention import flash_attention_kernel
@@ -109,6 +109,60 @@ def segmented_union(
     pos = jnp.clip(rank, 0, max_out - 1)
     out = jnp.full((fp.shape[0], max_out), SENTINEL, jnp.int32)
     out = out.at[jnp.arange(fp.shape[0])[:, None], pos].min(val)
+    out = out[:B].reshape(batch_shape + (max_out,))
+    return out, out != SENTINEL
+
+
+def frontier_compact(
+    cand: jnp.ndarray,
+    visited: jnp.ndarray,
+    max_out: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    visited_sorted: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-BFS-frontier compaction -> (int32[..., max_out], mask).
+
+    Keeps the first occurrence of every SENTINEL-padded candidate that is
+    not present in the matching ``visited`` row, sorted ascending and
+    capped at ``max_out`` — the k-hop traversal inner step. Pallas path:
+    the all-pairs first-occurrence + rank kernel with a visited-row
+    exclusion pass, then one scatter (no sort). Fallback: the
+    ``frontier_ref`` sort path. Bit-identical outputs either way.
+
+    ``visited_sorted=True`` promises each visited row is already sorted
+    ascending (SENTINEL pads last) — callers compacting several candidate
+    chunks against one visited buffer sort it once, not per chunk.
+    """
+    if not use_pallas:
+        # Production jnp path: sort the visited row and exclude by binary
+        # search (O(Kc log Kv)), then the double-sort dedup. The
+        # all-pairs ``frontier_ref`` oracle is O(Kc*Kv) — it exists for
+        # obvious correctness, not speed — outputs are bit-identical.
+        valid = cand != SENTINEL
+        vs = visited if visited_sorted else jnp.sort(visited, axis=-1)
+        seen = sorted_isin(cand, valid, vs, vs != SENTINEL)
+        flat = jnp.where(valid & ~seen, cand, SENTINEL)
+        return ref.segmented_union_ref(flat, max_out)
+    if interpret is None:
+        interpret = not _on_tpu()
+    batch_shape = cand.shape[:-1]
+    c2 = cand.reshape((-1, cand.shape[-1]))
+    v2 = visited.reshape((-1, visited.shape[-1]))
+    if c2.shape[0] != v2.shape[0]:
+        raise ValueError(
+            f"batch mismatch {cand.shape} vs {visited.shape}"
+        )
+    B = c2.shape[0]
+    cp = _pad_to(_pad_to(c2, 1, 128, SENTINEL), 0, 8, SENTINEL)
+    vp = _pad_to(_pad_to(v2, 1, 128, SENTINEL), 0, 8, SENTINEL)
+    kept, rank = frontier_kernel(cp, vp, interpret=interpret)
+    keep = (kept > 0) & (rank < max_out)
+    val = jnp.where(keep, cp, SENTINEL)
+    pos = jnp.clip(rank, 0, max_out - 1)
+    out = jnp.full((cp.shape[0], max_out), SENTINEL, jnp.int32)
+    out = out.at[jnp.arange(cp.shape[0])[:, None], pos].min(val)
     out = out[:B].reshape(batch_shape + (max_out,))
     return out, out != SENTINEL
 

@@ -42,6 +42,26 @@ def segmented_union_ref(
     return uniq[..., :max_out], mask[..., :max_out]
 
 
+def frontier_ref(
+    cand: jnp.ndarray, visited: jnp.ndarray, max_out: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the frontier dedup/compaction kernel (kernels/frontier.py).
+
+    cand: int32[..., Kc] SENTINEL-padded candidate next-hop nodes
+    (unsorted, duplicates allowed); visited: int32[..., Kv] SENTINEL-padded
+    already-collected nodes. Drops candidates present in the visited row,
+    then dedups/sorts/caps exactly like ``segmented_union_ref``. All-pairs
+    membership — the simplest obviously-correct form.
+    """
+    valid = cand != SENTINEL
+    seen = jnp.any(
+        (cand[..., :, None] == visited[..., None, :]) & valid[..., :, None],
+        axis=-1,
+    )
+    flat = jnp.where(valid & ~seen, cand, SENTINEL)
+    return segmented_union_ref(flat, max_out)
+
+
 def filtered_alters_ref(
     vals: jnp.ndarray,
     mask: jnp.ndarray,

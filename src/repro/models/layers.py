@@ -14,7 +14,6 @@ fast path behind the same interface.
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 import re
 from contextlib import contextmanager
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

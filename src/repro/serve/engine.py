@@ -9,7 +9,7 @@ serving-side analogue of the training step's shape stability.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 import jax

@@ -17,9 +17,8 @@ collective term); numerics here are bit-identical to that deployment.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -24,15 +24,14 @@ from __future__ import annotations
 
 import signal
 import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.models.sharding import MeshPolicy, param_shardings, use_policy
+from repro.models.sharding import MeshPolicy, use_policy
 from .checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
 from .optimizer import AdamWConfig, adamw_update, cast_like, init_opt_state
 

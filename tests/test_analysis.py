@@ -1,7 +1,6 @@
 """Analysis functions vs networkx oracles (BFS, components, density)."""
 
 import numpy as np
-import jax.numpy as jnp
 import networkx as nx
 import pytest
 

@@ -223,3 +223,66 @@ def test_cli_loadattrs_and_import_export(tmp_path):
     s.run_line(f'importlayer(net, Random, file = "{edges}")')
     names = {l["name"] for l in json.loads(s.run_line("listlayers(net)"))["result"]}
     assert names == {"Random", "Workplaces"}
+
+
+# ---------------------------------------------------------------------------
+# Batched traversal commands (khop / egosample / walkbatch / componentsfast)
+# ---------------------------------------------------------------------------
+
+TRAVERSAL_SCRIPT = SCRIPT + """
+khop(net, 0; 7, k = 2, layernames = Random)
+egosample(net, 0; 7, k = 2, layernames = Random)
+walkbatch(net, 0; 7, steps = 5, walkers = 3, seed = 1)
+componentsfast(net)
+componentsfast(net, layernames = Workplaces)
+"""
+
+
+def test_traversal_commands_json_mode():
+    s = Session(mode="json")
+    outs = [json.loads(o) for o in s.run_script(TRAVERSAL_SCRIPT)]
+    by_cmd = {}
+    for r in outs:
+        by_cmd.setdefault(r["command"], []).append(r["result"])
+
+    khop = by_cmd["khop"][0]
+    assert [r["source"] for r in khop] == [0, 7]
+    for rec in khop:
+        assert rec["count"] == len(rec["nodes"]) == len(rec["hops"])
+        assert set(rec["hops"]) <= {1, 2}
+
+    ego = by_cmd["egosample"][0]
+    assert len(ego) == 2
+    # egosample is the deduped union of the khop hop groups
+    for rec, alters in zip(khop, ego):
+        assert sorted(rec["nodes"]) == alters
+
+    paths = by_cmd["walkbatch"][0]
+    assert len(paths) == 6 and all(len(p) == 6 for p in paths)
+    assert [p[0] for p in paths] == [0, 0, 0, 7, 7, 7]
+
+    assert all(isinstance(c, int) and c >= 1 for c in by_cmd["componentsfast"])
+
+
+def test_traversal_commands_text_mode():
+    s = Session(mode="text")
+    outs = s.run_script(TRAVERSAL_SCRIPT)
+    assert len(outs) == 5
+    assert all(isinstance(o, str) and o for o in outs)
+
+
+def test_componentsfast_matches_components():
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    fast = json.loads(s.run_line("componentsfast(net)"))["result"]
+    slow = json.loads(s.run_line("components(net)"))["result"]
+    assert fast == slow
+
+
+def test_khop_with_filter_excludes_alters():
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    s.run_line("setattr(net, vip, 0, true)")
+    s.run_line("vips = selectnodes(net, attr = vip, op = eq, value = true)")
+    rec = json.loads(s.run_line("khop(net, 0, k = 2, filter = vips)"))
+    assert rec["result"][0]["count"] == 0  # only node 0 passes; no alters

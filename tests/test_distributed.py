@@ -7,7 +7,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -30,7 +29,7 @@ def _run(code: str, n_devices: int = 8) -> str:
 def test_sharded_train_step_matches_single_device(tmp_path):
     """A jitted sharded train step on an 8-device mesh must produce the
     same loss trajectory as single-device execution (same seeds)."""
-    code = f"""
+    code = """
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -10,11 +10,10 @@ functions, HLO analyzer) behave.
 import json
 from pathlib import Path
 
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import all_arch_names
-from repro.configs.shapes import SHAPES, SUBQUADRATIC, all_cells, cell_applicable
+from repro.configs.shapes import SHAPES, SUBQUADRATIC, all_cells
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 

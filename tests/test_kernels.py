@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")

@@ -11,7 +11,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import project_two_mode, two_mode_from_memberships
-from repro.core.csr import SENTINEL
 
 
 def _random_two_mode(seed, n_nodes, n_hyper, n_memb):

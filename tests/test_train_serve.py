@@ -1,7 +1,6 @@
 """Training loop (fault tolerance, resume, compression), serving engine,
 and data pipeline determinism."""
 
-import os
 import numpy as np
 import jax
 import jax.numpy as jnp

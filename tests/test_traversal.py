@@ -1,0 +1,385 @@
+"""Batched multi-source traversal: frontier kernel bit-identity, k-hop BFS
+vs the dense-BFS oracle, ego batches, walk fleets, components, edge cases."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+
+from conftest import onemode_to_networkx
+from repro.core import (
+    NodeSelection,
+    components_batched,
+    connected_components,
+    bfs_distances,
+    create_network,
+    ego_batch,
+    khop_neighborhood,
+    neighborhood_sample,
+    one_mode_from_edges,
+    random_walk_batch,
+    two_mode_from_memberships,
+)
+from repro.core.csr import SENTINEL
+from repro.kernels import ops as kops, ref
+
+INF = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# frontier kernel: bit-identity property sweep vs frontier_ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize(
+    "B,Kc,Kv,max_out", [(3, 7, 5, 4), (8, 130, 40, 64), (17, 33, 129, 33)]
+)
+def test_frontier_compact_matches_ref(seed, B, Kc, Kv, max_out):
+    rng = np.random.default_rng(seed * 1000 + B + Kc)
+    cand = rng.integers(0, 40, (B, Kc)).astype(np.int32)
+    cand[rng.random((B, Kc)) < 0.3] = SENTINEL
+    visited = rng.integers(0, 40, (B, Kv)).astype(np.int32)
+    visited[rng.random((B, Kv)) < 0.3] = SENTINEL
+    cj, vj = jnp.asarray(cand), jnp.asarray(visited)
+    want_v, want_m = ref.frontier_ref(cj, vj, max_out)
+    # both production paths (Pallas kernel, sorted-search jnp) vs oracle
+    for use_pallas in (True, False):
+        got_v, got_m = kops.frontier_compact(
+            cj, vj, max_out, use_pallas=use_pallas, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+
+
+def test_frontier_compact_excludes_visited_and_dedups():
+    cand = jnp.asarray([[5, 3, 5, 9, SENTINEL, 3]], jnp.int32)
+    visited = jnp.asarray([[9, SENTINEL]], jnp.int32)
+    v, m = kops.frontier_compact(cand, visited, 4, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(v)[0][:2], [3, 5])
+    assert np.asarray(m).sum() == 2
+
+
+# ---------------------------------------------------------------------------
+# k-hop BFS vs dense-BFS oracle (mixed modes, filters)
+# ---------------------------------------------------------------------------
+
+
+def _khop_oracle(net, source, k, layer_names=None):
+    """Per-hop node sets from the dense BFS distances."""
+    dist = np.asarray(bfs_distances(net, source, layer_names))
+    return {h: set(np.nonzero(dist == h)[0].tolist()) for h in range(k + 1)}
+
+
+@pytest.mark.parametrize("layer_names", [None, ["er"], ["wk"], ["er", "wk"]])
+def test_khop_matches_bfs_oracle(small_mixed_network, layer_names):
+    net = small_mixed_network
+    sources = jnp.asarray([0, 7, 33, 99], jnp.int32)
+    k = 3
+    nodes, mask, hops = khop_neighborhood(
+        net, sources, k, max_frontier=net.n_nodes, layer_names=layer_names
+    )
+    nodes, mask, hops = map(np.asarray, (nodes, mask, hops))
+    for i, s in enumerate([0, 7, 33, 99]):
+        want = _khop_oracle(net, s, k, layer_names)
+        for h in range(k + 1):
+            got = set(nodes[i][mask[i] & (hops == h)].tolist())
+            assert got == want[h], f"source {s} hop {h}"
+
+
+def test_khop_groups_are_sorted_and_padded(small_mixed_network):
+    nodes, mask, hops = khop_neighborhood(
+        small_mixed_network, jnp.asarray([5], jnp.int32), 2, max_frontier=64
+    )
+    nodes, mask, hops = map(np.asarray, (nodes, mask, hops))
+    for h in (1, 2):
+        grp = nodes[0][hops == h]
+        valid = grp[grp != SENTINEL]
+        assert np.all(np.diff(valid) > 0)  # sorted unique
+        assert np.all(grp[len(valid):] == SENTINEL)  # padding at the end
+
+
+def test_khop_max_frontier_caps_to_smallest_ids(small_mixed_network):
+    net = small_mixed_network
+    full, fmask, fhops = khop_neighborhood(
+        net, jnp.asarray([0], jnp.int32), 1, max_frontier=net.n_nodes
+    )
+    cap, cmask, chops = khop_neighborhood(
+        net, jnp.asarray([0], jnp.int32), 1, max_frontier=2
+    )
+    full_h1 = np.asarray(full)[0][np.asarray(fhops) == 1]
+    full_h1 = full_h1[full_h1 != SENTINEL]
+    got = np.asarray(cap)[0][np.asarray(chops) == 1]
+    np.testing.assert_array_equal(got, np.sort(full_h1)[:2])
+
+
+def test_khop_degree_zero_source_and_k0():
+    net = create_network(4).with_layer(
+        "l", one_mode_from_edges(4, [0], [1])
+    )
+    # node 3 is isolated: its k-hop set is just itself
+    nodes, mask, hops = khop_neighborhood(
+        net, jnp.asarray([3, 0], jnp.int32), 2, max_frontier=4
+    )
+    nodes, mask = np.asarray(nodes), np.asarray(mask)
+    assert nodes[0][0] == 3 and mask[0].sum() == 1
+    assert set(nodes[1][mask[1]].tolist()) == {0, 1}
+    # k = 0: sources only, one slot
+    n0, m0, h0 = khop_neighborhood(net, jnp.asarray([2], jnp.int32), 0)
+    assert np.asarray(n0).tolist() == [[2]]
+    assert np.asarray(m0).tolist() == [[True]]
+    assert np.asarray(h0).tolist() == [0]
+
+
+def test_khop_all_filtered_frontier(small_mixed_network):
+    net = small_mixed_network
+    nobody = NodeSelection(np.zeros(net.n_nodes, bool))
+    nodes, mask, hops = khop_neighborhood(
+        net, jnp.asarray([0, 50], jnp.int32), 3, max_frontier=16,
+        node_filter=nobody,
+    )
+    mask = np.asarray(mask)
+    # sources are always included; every alter is excluded by the filter
+    assert mask[:, 0].all() and mask[:, 1:].sum() == 0
+
+
+def test_khop_node_filter_matches_induced_subgraph(small_mixed_network):
+    net = small_mixed_network
+    keep = np.zeros(net.n_nodes, bool)
+    keep[:60] = True
+    sel = NodeSelection(keep)
+    nodes, mask, hops = khop_neighborhood(
+        net, jnp.asarray([3], jnp.int32), 2, max_frontier=net.n_nodes,
+        layer_names=["er"], node_filter=sel,
+    )
+    got = set(np.asarray(nodes)[0][np.asarray(mask)[0]].tolist()) - {3}
+    g = onemode_to_networkx(net.layer("er")).subgraph(range(60))
+    want = {
+        v for v, d in nx.single_source_shortest_path_length(g, 3).items()
+        if 1 <= d <= 2
+    }
+    assert got == want
+
+
+def test_khop_two_mode_hyperedge_exceeds_largest_bucket():
+    # one giant hyperedge (200 members) wider than the last default bucket
+    # width (128): the width ladder must close at the layer max, and the
+    # frontier must hold every co-member after one hop
+    n = 260
+    giant = np.arange(200)
+    small = np.array([200, 201, 202])
+    layer = two_mode_from_memberships(
+        n, 2,
+        np.concatenate([giant, small]),
+        np.concatenate([np.zeros(200, np.int64), np.ones(3, np.int64)]),
+    )
+    net = create_network(n).with_layer("aff", layer)
+    nodes, mask, hops = khop_neighborhood(
+        net, jnp.asarray([0, 201], jnp.int32), 1, max_frontier=n
+    )
+    nodes, mask, hops = map(np.asarray, (nodes, mask, hops))
+    got0 = set(nodes[0][mask[0] & (hops == 1)].tolist())
+    assert got0 == set(range(1, 200))
+    got1 = set(nodes[1][mask[1] & (hops == 1)].tolist())
+    assert got1 == {200, 202}
+
+
+def test_khop_traced_requires_static_cap(small_mixed_network):
+    net = small_mixed_network
+
+    def run(src):
+        return khop_neighborhood(net, src, 1, max_frontier=8)[0]
+
+    with pytest.raises(ValueError, match="max_alters_per_node"):
+        jax.jit(run)(jnp.asarray([1], jnp.int32))
+
+
+def test_khop_traced_with_static_cap_matches_concrete(small_mixed_network):
+    net = small_mixed_network
+    src = jnp.asarray([2, 40], jnp.int32)
+
+    def run(s):
+        return khop_neighborhood(
+            net, s, 2, max_frontier=32, max_alters_per_node=64,
+            layer_names=["ws"],
+        )
+
+    nodes_t, mask_t, _ = jax.jit(run)(src)
+    nodes_c, mask_c, _ = khop_neighborhood(
+        net, src, 2, max_frontier=32, max_alters_per_node=64,
+        layer_names=["ws"],
+    )
+    np.testing.assert_array_equal(np.asarray(nodes_t), np.asarray(nodes_c))
+    np.testing.assert_array_equal(np.asarray(mask_t), np.asarray(mask_c))
+
+
+# ---------------------------------------------------------------------------
+# ego batches
+# ---------------------------------------------------------------------------
+
+
+def test_ego_batch_k1_matches_node_alters(small_mixed_network):
+    net = small_mixed_network
+    egos = jnp.asarray([1, 17, 63], jnp.int32)
+    v1, m1 = ego_batch(net, egos, 64)
+    v2, m2 = net.node_alters(egos, 64)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_ego_batch_k2_is_sorted_union_of_hops(small_mixed_network):
+    net = small_mixed_network
+    egos = [4, 71]
+    vals, mask = ego_batch(
+        net, jnp.asarray(egos, jnp.int32), net.n_nodes, k=2,
+        layer_names=["ba"],
+    )
+    vals, mask = np.asarray(vals), np.asarray(mask)
+    for i, e in enumerate(egos):
+        want = _khop_oracle(net, e, 2, ["ba"])
+        got = vals[i][mask[i]].tolist()
+        assert got == sorted(want[1] | want[2])  # sorted, deduped, no ego
+
+
+# ---------------------------------------------------------------------------
+# walk fleet
+# ---------------------------------------------------------------------------
+
+
+def test_walk_batch_shapes_and_edges():
+    net = create_network(5).with_layer(
+        "line", one_mode_from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4])
+    )
+    layer = net.layer("line")
+    paths = np.asarray(random_walk_batch(
+        net, jnp.asarray([0, 2], jnp.int32), 12, jax.random.PRNGKey(0),
+        walkers_per_start=4,
+    ))
+    assert paths.shape == (8, 13)
+    np.testing.assert_array_equal(paths[:4, 0], 0)
+    np.testing.assert_array_equal(paths[4:, 0], 2)
+    for path in paths:
+        for a, b in zip(path[:-1], path[1:]):
+            if a != b:
+                assert bool(layer.check_edge(
+                    jnp.array([a]), jnp.array([b])
+                )[0])
+
+
+def test_walk_batch_node_filter_never_entered(small_mixed_network):
+    net = small_mixed_network
+    keep = np.ones(net.n_nodes, bool)
+    keep[50:] = False
+    paths = np.asarray(random_walk_batch(
+        net, jnp.asarray([0, 10, 20], jnp.int32), 40,
+        jax.random.PRNGKey(3), walkers_per_start=2,
+        node_filter=NodeSelection(keep),
+    ))
+    assert (paths < 50).all()
+
+
+def test_walk_batch_layer_weights():
+    net = create_network(5).with_layer(
+        "line", one_mode_from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4])
+    ).with_layer("empty", one_mode_from_edges(5, [], []))
+    paths = np.asarray(random_walk_batch(
+        net, jnp.zeros(8, jnp.int32), 10, jax.random.PRNGKey(0),
+        layer_weights=[1.0, 1e-9],
+    ))
+    assert (paths[:, -1] > 0).any()
+
+
+# ---------------------------------------------------------------------------
+# components (pointer-jumping label propagation)
+# ---------------------------------------------------------------------------
+
+
+def test_components_batched_matches_networkx(small_mixed_network):
+    net = small_mixed_network
+    g = onemode_to_networkx(net.layer("er"))
+    want = list(nx.connected_components(g))
+    labels = np.asarray(components_batched(net, ["er"]))
+    got = {}
+    for v, l in enumerate(labels):
+        got.setdefault(int(l), set()).add(v)
+    assert sorted(map(sorted, got.values())) == sorted(map(sorted, want))
+
+
+def test_components_batched_long_path_converges():
+    # a 400-node path: the one-hop sweep needs ~400 iterations, pointer
+    # jumping collapses it in O(log n) — and the labels must still be exact
+    n = 400
+    net = create_network(n).with_layer(
+        "path", one_mode_from_edges(n, np.arange(n - 1), np.arange(1, n))
+    )
+    labels = np.asarray(components_batched(net))
+    assert (labels == 0).all()
+
+
+def test_components_batched_through_two_mode_and_filter():
+    net = create_network(6)
+    layer = two_mode_from_memberships(
+        6, 2, np.array([0, 1, 2, 3, 4]), np.array([0, 0, 0, 1, 1])
+    )
+    net = net.with_layer("aff", layer)
+    labels = np.asarray(components_batched(net))
+    assert labels[0] == labels[1] == labels[2]
+    assert labels[3] == labels[4]
+    assert len({labels[0], labels[3], labels[5]}) == 3
+    # filter out node 1: {0,2} stay joined via the hyperedge, 1 is singleton
+    keep = np.array([True, False, True, True, True, True])
+    flabels = np.asarray(
+        components_batched(net, node_filter=NodeSelection(keep))
+    )
+    assert flabels[0] == flabels[2]
+    assert flabels[1] not in (flabels[0], flabels[3])
+    assert flabels[3] == flabels[4]
+
+
+def test_connected_components_delegates(small_mixed_network):
+    np.testing.assert_array_equal(
+        np.asarray(connected_components(small_mixed_network)),
+        np.asarray(components_batched(small_mixed_network)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# neighborhood_sample hop dedup (hub over-representation regression)
+# ---------------------------------------------------------------------------
+
+
+def test_neighborhood_sample_dedups_hub_across_hops():
+    """Regression: hop-2 sampling used to draw per duplicated frontier
+    entry, so an alter shared by many frontier nodes (hub-adjacent) was
+    over-represented. Sampling is now uniform over the frontier's deduped
+    alter union: 0->{1,2}, 1->{3,4}, 2->{3,5} gives node 3 mass 1/3 (union
+    {3,4,5}), not the old 1/2 (each frontier node drawing from 2 alters)."""
+    net = create_network(6).with_layer(
+        "l",
+        one_mode_from_edges(
+            6, [0, 0, 1, 1, 2, 2], [1, 2, 3, 4, 3, 5], directed=True
+        ),
+    )
+    hops = neighborhood_sample(
+        net, jnp.asarray([0], jnp.int32), fanout=[64, 64],
+        key=jax.random.PRNGKey(0), method="alters",
+    )
+    assert hops[0].shape == (64,)
+    assert hops[1].shape == (64 * 64,)
+    h2 = np.asarray(hops[1])
+    freq3 = (h2 == 3).mean()
+    assert abs(freq3 - 1 / 3) < 0.06, freq3  # old behavior gives ~0.5
+    assert set(np.unique(h2).tolist()) <= {3, 4, 5}
+
+
+def test_ego_sample_k2_dedups(small_mixed_network):
+    from repro.core import ego_sample
+
+    net = small_mixed_network
+    vals, mask = ego_sample(net, jnp.asarray([9], jnp.int32),
+                            net.n_nodes, k=2)
+    got = np.asarray(vals)[0][np.asarray(mask)[0]]
+    assert len(got) == len(set(got.tolist()))
+    want = _khop_oracle(net, 9, 2)
+    assert set(got.tolist()) == want[1] | want[2]

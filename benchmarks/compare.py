@@ -1,0 +1,168 @@
+"""Benchmark-regression gate: diff fresh bench JSONs against tracked records.
+
+The repo tracks one JSON per benchmark family (``BENCH_1.json`` …) whose
+headline is a *speedup ratio* between a baseline row and an optimized row
+(padded vs bucketed, per-source loop vs batched, per-call loop vs serve
+engine). CI's bench-smoke job reruns every workload at tiny sizes and
+writes ``BENCH_*_smoke.json`` sidecars; this script recomputes each
+tracked ratio from the sidecars and **fails on a >30% relative
+regression** — a PR that quietly serializes a batched path or disables a
+kernel can no longer merge green. It prints the comparison table either
+way.
+
+Absolute µs numbers are machine- and size-dependent, so only ratios are
+gated. Smoke sizes also shrink each pair's ratio differently (tiny
+batches can't amortize the bucketed path's host planning at all — some
+pairs legitimately drop below 1x), so each pair carries its own **smoke
+reference ratio**: the locally measured smoke-run ratio with ~2x
+headroom for runner noise. Smoke runs gate against that reference; full
+runs (nightly) gate against the tracked record itself. Both use the
+same ``--threshold`` relative band.
+
+Usage:
+    python benchmarks/compare.py --suffix _smoke        # CI bench-smoke
+    python benchmarks/compare.py --current-dir /tmp/out # nightly full run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# (tracked file, baseline row, optimized row, smoke reference ratio).
+# The smoke reference is ~half the smoke-size ratio measured when the pair
+# was recorded — regressions that serialize a batched path or disable a
+# kernel collapse the ratio by 10x+, far past the 30% band below these.
+PAIRS: list[tuple[str, str, str, float]] = [
+    ("BENCH_1.json", "skewed/getedge_padded", "skewed/getedge_bucketed",
+     0.05),
+    ("BENCH_1.json", "skewed/getnodealters_padded",
+     "skewed/getnodealters_bucketed", 2.5),
+    ("BENCH_1.json", "kernel/intersect_skewed_globalpad",
+     "kernel/intersect_skewed_bucketed", 7.0),
+    ("BENCH_2.json", "filtered/getedge_padded", "filtered/getedge_bucketed",
+     0.05),
+    ("BENCH_2.json", "filtered/getnodealters_padded",
+     "filtered/getnodealters_bucketed", 1.4),
+    ("BENCH_4.json", "traversal/khop_per_source_loop",
+     "traversal/khop_batched", 20.0),
+    ("BENCH_5.json", "serve/per_call_loop", "serve/engine", 60.0),
+]
+
+
+def _load(path: Path) -> dict[str, float]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(
+    tracked_dir: Path,
+    current_dir: Path,
+    suffix: str,
+    threshold: float,
+    headroom: float = 0.5,
+) -> tuple[list[dict], bool]:
+    """Returns (table rows, ok). A row regresses when the current ratio
+    falls below ``(1 - threshold) * reference``: for ``--suffix`` (smoke)
+    runs the reference is the pair's smoke reference ratio (which already
+    carries noise headroom); for full runs it is ``headroom *
+    tracked_ratio`` — tracked records are measured locally, and the same
+    machine under load produced a 2x lower serve ratio than when idle,
+    so a shared CI runner needs that slack to gate real regressions
+    (10x+ collapses) without chronic false alarms."""
+    rows, ok = [], True
+    for fname, base, opt, smoke_ref in PAIRS:
+        tracked_path = tracked_dir / fname
+        cur_path = current_dir / f"{Path(fname).stem}{suffix}.json"
+        row = {"file": fname, "pair": f"{base} / {opt}"}
+        if not tracked_path.exists():
+            row.update(status="NO TRACKED RECORD", ok=True)
+            rows.append(row)
+            continue
+        tracked = _load(tracked_path)
+        if base not in tracked or opt not in tracked:
+            row.update(status="PAIR NOT IN TRACKED RECORD", ok=True)
+            rows.append(row)
+            continue
+        tracked_ratio = tracked[base] / tracked[opt]
+        row["tracked_x"] = tracked_ratio
+        if not cur_path.exists():
+            row.update(status=f"MISSING {cur_path.name}", ok=False)
+            ok = False
+            rows.append(row)
+            continue
+        current = _load(cur_path)
+        if base not in current or opt not in current:
+            row.update(status="PAIR NOT IN CURRENT RUN", ok=False)
+            ok = False
+            rows.append(row)
+            continue
+        cur_ratio = current[base] / current[opt]
+        reference = smoke_ref if suffix else headroom * tracked_ratio
+        floor = (1.0 - threshold) * reference
+        row.update(
+            current_x=cur_ratio,
+            floor_x=floor,
+            status="ok" if cur_ratio >= floor else "REGRESSION",
+            ok=cur_ratio >= floor,
+        )
+        ok = ok and row["ok"]
+        rows.append(row)
+    return rows, ok
+
+
+def print_table(rows: list[dict]) -> None:
+    hdr = f"{'pair':<58} {'tracked':>9} {'current':>9} {'floor':>7}  status"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        tr = f"{r['tracked_x']:.1f}x" if "tracked_x" in r else "-"
+        cu = f"{r['current_x']:.1f}x" if "current_x" in r else "-"
+        fl = f"{r['floor_x']:.1f}x" if "floor_x" in r else "-"
+        print(f"{r['pair']:<58} {tr:>9} {cu:>9} {fl:>7}  {r['status']}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    here = Path(__file__).parent
+    ap.add_argument(
+        "--tracked-dir", type=Path, default=here,
+        help="directory holding the git-tracked BENCH_*.json records",
+    )
+    ap.add_argument(
+        "--current-dir", type=Path, default=here,
+        help="directory holding this run's BENCH JSONs",
+    )
+    ap.add_argument(
+        "--suffix", default="",
+        help="current-file suffix before .json (CI smoke runs: _smoke)",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.30,
+        help="relative regression band on the speedup ratio (default 0.30)",
+    )
+    ap.add_argument(
+        "--headroom", type=float, default=0.5,
+        help="full-run reference = headroom * tracked ratio (machine "
+        "variance slack; smoke references already include it)",
+    )
+    args = ap.parse_args(argv)
+    rows, ok = compare(
+        args.tracked_dir, args.current_dir, args.suffix, args.threshold,
+        args.headroom,
+    )
+    print_table(rows)
+    if not ok:
+        print(
+            f"\nFAIL: speedup ratio regressed >{args.threshold:.0%} below "
+            "the reference record", file=sys.stderr,
+        )
+        return 1
+    print("\nall tracked speedup ratios within the regression band")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

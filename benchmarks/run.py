@@ -33,6 +33,7 @@ ROWS: list[str] = []
 RESULTS: dict[str, float] = {}  # bench_name -> us_per_call (BENCH_1.json)
 RESULTS_FILTERED: dict[str, float] = {}  # filtered workload (BENCH_2.json)
 RESULTS_TRAVERSAL: dict[str, float] = {}  # traversal workload (BENCH_4.json)
+RESULTS_SERVE: dict[str, float] = {}  # serving workload (BENCH_5.json)
 
 
 def emit(
@@ -450,6 +451,137 @@ def traversal_perf() -> None:
          f"n_nodes={net.n_nodes}", results=RESULTS_TRAVERSAL)
 
 
+def build_serve_trace(net, n_requests: int, seed: int = 17) -> list[dict]:
+    """A mixed threadleR-style request trace with realistic repetition.
+
+    Kind mix: 40% getedge / 20% alters / 15% degree / 10% filtered point
+    queries / 10% khop / 5% walkbatch. Arguments draw from small pools
+    (hot keys), so a served stream sees repeats — the result cache's
+    workload — while first occurrences still dominate.
+
+    getedge probes the two-mode Workplaces pseudo-projection (membership
+    intersects — point-query cheap at any hyperedge size); alters / khop
+    run on the one-mode layers, because this network's Workplaces
+    hyperedges hold ~n/3 members each and a single alters union over
+    them is a bulk-analytics query, not a serveable micro-query.
+    """
+    rng = np.random.default_rng(seed)
+    n = net.n_nodes
+    pair_pool = rng.integers(0, n, (max(n_requests // 5, 8), 2))
+    node_pool = rng.integers(0, n, max(n_requests // 10, 8))
+    khop_pool = rng.integers(0, n, max(n_requests // 40, 4))
+    walk_pool = rng.integers(0, n, max(n_requests // 80, 2))
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    trace: list[dict] = []
+    kinds = rng.choice(
+        ["getedge", "alters", "degree", "fgetedge", "falters", "khop",
+         "walkbatch"],
+        size=n_requests,
+        p=[0.40, 0.20, 0.15, 0.05, 0.05, 0.10, 0.05],
+    )
+    for kind in kinds:
+        if kind in ("getedge", "fgetedge"):
+            u, v = pair_pool[rng.integers(0, len(pair_pool))]
+            req = {"kind": "getedge", "layer": "Workplaces",
+                   "u": int(u), "v": int(v)}
+            if kind == "fgetedge":
+                req["filter"] = flt
+        elif kind in ("alters", "falters"):
+            req = {"kind": "alters",
+                   "u": int(node_pool[rng.integers(0, len(node_pool))]),
+                   "layers": ["Neighbors", "Communication"],
+                   "max_alters": 128}
+            if kind == "falters":
+                req["filter"] = flt
+        elif kind == "degree":
+            req = {"kind": "degree",
+                   "u": int(node_pool[rng.integers(0, len(node_pool))])}
+        elif kind == "khop":
+            req = {"kind": "khop",
+                   "sources": int(khop_pool[rng.integers(0, len(khop_pool))]),
+                   "k": 1, "max_frontier": 128,
+                   "layers": ["Neighbors", "Communication"]}
+        else:
+            req = {"kind": "walkbatch",
+                   "starts": int(walk_pool[rng.integers(0, len(walk_pool))]),
+                   "steps": 8, "walkers": 4, "seed": 3,
+                   "layers": ["Communication"]}
+        trace.append(req)
+    return trace
+
+
+def serve_perf(net) -> None:
+    """Concurrent serving engine vs one-call-at-a-time loop (BENCH_5.json).
+
+    Replays a mixed 10k-request trace through the micro-batching +
+    result-cache engine (serve/graph_engine.py) and through the per-call
+    reference executor ``run_request`` — no batching, no cache, exactly
+    what a client script issuing one query per engine call gets. Asserts
+    the served results are bit-identical to the loop and the engine is
+    >= 5x queries/sec.
+    """
+    from repro.core.api import setnodeattr
+    from repro.serve import (
+        GraphServeEngine, assert_results_equal, run_request,
+    )
+
+    rng = np.random.default_rng(23)
+    net = setnodeattr(
+        net, "grp", np.arange(net.n_nodes),
+        rng.integers(0, 3, net.n_nodes).astype(np.int64),
+    )
+    n_requests = _b(10_000, 200)
+    trace = build_serve_trace(net, n_requests)
+    mix = {k: sum(1 for r in trace if r["kind"] == k)
+           for k in ("getedge", "alters", "degree", "khop", "walkbatch")}
+
+    # Warm both paths' jit caches: the engine's batched shapes depend on
+    # round sizes, so one full warm pass amortizes its compiles the way a
+    # resident engine does; the loop warms on a stride sample across the
+    # WHOLE trace (not just a prefix), so kind/filter/bucket variants
+    # first appearing late don't compile inside the timed loop and
+    # inflate the gated ratio. Timed runs below reuse nothing else (the
+    # timed engine is fresh — result cache cold).
+    for r in trace[:: max(1, len(trace) // _b(256, 32))]:
+        run_request(net, r)
+    GraphServeEngine(net).serve(trace)
+
+    t0 = time.perf_counter()
+    loop_out = [run_request(net, r) for r in trace]
+    us_loop = (time.perf_counter() - t0) * 1e6
+
+    engine = GraphServeEngine(net, cache_size=4096)
+    t0 = time.perf_counter()
+    served = engine.serve(trace)
+    us_srv = (time.perf_counter() - t0) * 1e6
+
+    # bit-identity: every served result == its per-call-loop result
+    assert len(served) == len(loop_out)
+    for r, ref in zip(served, loop_out):
+        assert r.error is None, r.error
+        assert_results_equal(r.value, ref)
+
+    stats = engine.stats
+    cache = stats["cache"]
+    hit_rate = (cache["hits"] + stats["coalesced_dupes"]) / n_requests
+    speedup = us_loop / us_srv
+    qps_loop = n_requests / (us_loop / 1e6)
+    qps_srv = n_requests / (us_srv / 1e6)
+    mix_s = ";".join(f"{k}={v}" for k, v in mix.items())
+    emit("serve/per_call_loop", us_loop / n_requests,
+         f"requests={n_requests};qps={qps_loop:.0f};{mix_s}",
+         results=RESULTS_SERVE)
+    emit("serve/engine", us_srv / n_requests,
+         f"requests={n_requests};qps={qps_srv:.0f}"
+         f";speedup={speedup:.1f}x;hit_rate={hit_rate:.2f}"
+         f";batches={sum(stats['batches'].values())};bit_identical=1",
+         results=RESULTS_SERVE)
+    if not SMOKE:
+        assert speedup >= 5.0, (
+            f"serving speedup {speedup:.1f}x below the 5x target"
+        )
+
+
 def shortest_path(net) -> None:
     from repro.core import shortest_path_length
 
@@ -549,6 +681,7 @@ def main() -> None:
     query_perf_skewed()
     query_perf_filtered()
     traversal_perf()
+    serve_perf(net)
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
@@ -560,6 +693,7 @@ def main() -> None:
     print(f"# wrote {write_bench_json()}")
     print(f"# wrote {write_bench_json(RESULTS_FILTERED, Path(__file__).parent / 'BENCH_2.json')}")
     print(f"# wrote {write_bench_json(RESULTS_TRAVERSAL, Path(__file__).parent / 'BENCH_4.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_SERVE, Path(__file__).parent / 'BENCH_5.json')}")
 
 
 if __name__ == "__main__":

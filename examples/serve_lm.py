@@ -14,7 +14,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.models.lm_serve import Request, ServeEngine
 
 
 def main() -> None:

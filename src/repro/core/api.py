@@ -54,6 +54,8 @@ __all__ = [
     "getdegree", "degreedist", "getdensity", "countcomponents",
     # batched traversal
     "khop", "egosample", "walkbatch", "componentsfast",
+    # serving
+    "serve",
     # container surface
     "listlayers", "deletelayer", "describenet",
     "exportlayer", "importlayer", "subnetwork", "samplenodes",
@@ -301,24 +303,14 @@ def khop(
     with ``nodes`` the reached ids (source excluded) grouped by hop order
     and ``hops`` the matching hop index per id.
     """
+    from .traversal import khop_records
+
     src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     nodes, mask, hop_of_slot = net.khop(
         jnp.asarray(src, jnp.int32), int(k), max_frontier=max_frontier,
         layer_names=layernames, node_filter=node_filter,
     )
-    nodes = np.asarray(nodes)
-    mask = np.asarray(mask)
-    hops = np.asarray(hop_of_slot)
-    out = []
-    for i, s in enumerate(src):
-        keep = mask[i] & (hops > 0)  # drop the source slot
-        out.append({
-            "source": int(s),
-            "count": int(keep.sum()),
-            "nodes": nodes[i][keep].tolist(),
-            "hops": hops[keep].tolist(),
-        })
-    return out
+    return khop_records(src, nodes, mask, hop_of_slot)
 
 
 def egosample(
@@ -366,6 +358,39 @@ def componentsfast(
     ``countcomponents`` plus the ``node_filter`` surface the legacy
     ``components`` command predates."""
     return countcomponents(net, layernames, node_filter=node_filter)
+
+
+# ---------------------------------------------------------------------------
+# Serving (serve/graph_engine.py — the threadleR server side)
+# ---------------------------------------------------------------------------
+
+
+def serve(
+    net: Network, trace, *, cache_size: int = 4096, queue_limit: int = 8192,
+    max_heavy_per_round: int = 1024,
+) -> tuple[list[dict], dict]:
+    """Replay a request trace through the micro-batching serve engine.
+
+    ``trace`` is a path to a JSONL trace file (see
+    ``serve.graph_engine.parse_trace``) or an iterable of request dicts.
+    Returns ``(records, stats)``: one ``{"id", "kind", "cached",
+    "result" | "error"}`` record per request, in request order, plus the
+    engine's cache/batch statistics.
+    """
+    import os
+
+    from repro.serve.graph_engine import load_trace
+
+    requests = (
+        load_trace(str(trace)) if isinstance(trace, (str, os.PathLike))
+        else list(trace)
+    )
+    engine = net.serve_session(
+        cache_size=cache_size, queue_limit=queue_limit,
+        max_heavy_per_round=max_heavy_per_round,
+    )
+    results = engine.serve(requests)
+    return [r.to_record() for r in results], engine.stats
 
 
 # ---------------------------------------------------------------------------

@@ -390,6 +390,40 @@ class Session:
             node_filter=self._node_filter(filter),
         ), None
 
+    # -- serving (paper §3.1 threadleR deployment) ----------------------------
+
+    def _cmd_serve(self, net, *, file, cache=4096, queuelimit=8192,
+                   maxheavy=1024):
+        """Replay a JSONL request-trace file through the serve engine."""
+        import time
+
+        t0 = time.perf_counter()
+        records, stats = api.serve(
+            net, str(file), cache_size=int(cache),
+            queue_limit=int(queuelimit), max_heavy_per_round=int(maxheavy),
+        )
+        dt = time.perf_counter() - t0
+        qps = len(records) / dt if dt > 0 else float("inf")
+        if self.mode == "json":
+            return {
+                "served": len(records),
+                "seconds": dt,
+                "qps": qps,
+                "stats": stats,
+                "results": records,
+            }, None
+        c = stats["cache"]
+        shared = c["hits"] + stats["coalesced_dupes"]
+        return (
+            f"served {len(records)} requests in {dt:.3f}s ({qps:,.0f} qps); "
+            f"{shared}/{len(records)} shared ({c['hits']} cache hits, "
+            f"{stats['coalesced_dupes']} coalesced), "
+            f"evictions {c['evictions']}; batches "
+            + " ".join(
+                f"{k}={v}" for k, v in stats["batches"].items() if v
+            )
+        ), None
+
     # -- container surface ----------------------------------------------------
 
     def _cmd_listlayers(self, net):

@@ -126,7 +126,15 @@ def _pad_rows(ids: np.ndarray, n: int) -> jnp.ndarray:
 # Per-layer cache: node -> max hyperedge size over its memberships.
 # Keyed by id() of the membership indices buffer; the buffer itself is
 # pinned in the value so a recycled id can be detected by identity check.
+# Bounded LRU (dicts preserve insertion order; a hit re-inserts as
+# newest): overflow evicts the least-recently-used entry, so a working
+# set of up to _NODE_WIDTH_CACHE_MAX layers stays warm under churn from
+# other layers (e.g. TemporalNetwork.window sliding across many years)
+# instead of being wiped wholesale as before. A strict cycle over more
+# than the cap still misses every time — as under any eviction policy —
+# but each miss costs one layer's width table, not all of them.
 _NODE_WIDTH_CACHE: dict[int, tuple[object, np.ndarray]] = {}
+_NODE_WIDTH_CACHE_MAX = 64
 
 
 def node_max_hyperedge_size(layer) -> np.ndarray:
@@ -138,6 +146,10 @@ def node_max_hyperedge_size(layer) -> np.ndarray:
     key = id(layer.memb.indices)
     hit = _NODE_WIDTH_CACHE.get(key)
     if hit is not None and hit[0] is layer.memb.indices:
+        # LRU: a hit re-promotes to newest (pop default guards a
+        # concurrent hit on the same key having popped it first)
+        _NODE_WIDTH_CACHE.pop(key, None)
+        _NODE_WIDTH_CACHE[key] = hit
         return hit[1]
     indptr = np.asarray(layer.memb.indptr)
     indices = np.asarray(layer.memb.indices)
@@ -149,8 +161,9 @@ def node_max_hyperedge_size(layer) -> np.ndarray:
         nonempty = lengths > 0
         starts = indptr[:-1][nonempty]
         out[nonempty] = np.maximum.reduceat(per_memb, starts)
-    if len(_NODE_WIDTH_CACHE) > 64:
-        _NODE_WIDTH_CACHE.clear()
+    _NODE_WIDTH_CACHE.pop(key, None)  # recycled id: re-insert as newest
+    while len(_NODE_WIDTH_CACHE) >= _NODE_WIDTH_CACHE_MAX:
+        del _NODE_WIDTH_CACHE[next(iter(_NODE_WIDTH_CACHE))]
     _NODE_WIDTH_CACHE[key] = (layer.memb.indices, out)
     return out
 

@@ -45,6 +45,7 @@ from .nodeset import node_filter_mask
 
 __all__ = [
     "khop_neighborhood",
+    "khop_records",
     "ego_batch",
     "random_walk_batch",
     "components_batched",
@@ -254,6 +255,28 @@ def khop_neighborhood(
         nodes = jnp.pad(nodes, ((0, 0), (0, pad)), constant_values=SENTINEL)
         mask = jnp.pad(mask, ((0, 0), (0, pad)), constant_values=False)
     return nodes, mask, jnp.asarray(hop_of_slot)
+
+
+def khop_records(
+    sources, nodes, mask, hop_of_slot
+) -> list[dict]:
+    """``khop_neighborhood`` output -> one client-facing record per source:
+    ``{"source", "count", "nodes", "hops"}`` with the source slot dropped.
+    The single definition shared by the CLI path (api.khop) and the serve
+    path (serve/graph_engine) — their records are asserted identical."""
+    nodes = np.asarray(nodes)
+    mask = np.asarray(mask)
+    hops = np.asarray(hop_of_slot)
+    out = []
+    for i, s in enumerate(np.asarray(sources).reshape(-1)):
+        keep = mask[i] & (hops > 0)  # drop the source slot
+        out.append({
+            "source": int(s),
+            "count": int(keep.sum()),
+            "nodes": nodes[i][keep].tolist(),
+            "hops": hops[keep].tolist(),
+        })
+    return out
 
 
 def ego_batch(

@@ -1,4 +1,7 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Batched LM serving engine: prefill + decode with continuous batching.
+
+(Moved from ``repro.serve.engine`` — ``repro.serve`` now serves graph
+queries; this engine serves the walk-corpus language models.)
 
 A fixed pool of `n_slots` decode lanes shares one KV cache; finished or
 empty lanes are refilled from the request queue (prefill writes that

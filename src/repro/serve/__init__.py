@@ -1,0 +1,35 @@
+"""repro.serve — the graph-query serving engine (threadleR's server side).
+
+One meaning: ``serve/`` serves *graph queries* from a resident Network
+(micro-batching + result cache + backpressure — see graph_engine.py).
+The LLM prefill/decode engine that used to live here moved to
+``repro.models.lm_serve``.
+"""
+
+from .graph_engine import (
+    GraphServeEngine,
+    QueryResult,
+    QueueFull,
+    HEAVY_KINDS,
+    POINT_KINDS,
+    REQUEST_KINDS,
+    assert_results_equal,
+    canonical_request,
+    load_trace,
+    parse_trace,
+    run_request,
+)
+
+__all__ = [
+    "GraphServeEngine",
+    "QueryResult",
+    "QueueFull",
+    "HEAVY_KINDS",
+    "POINT_KINDS",
+    "REQUEST_KINDS",
+    "assert_results_equal",
+    "canonical_request",
+    "load_trace",
+    "parse_trace",
+    "run_request",
+]

@@ -1,0 +1,943 @@
+"""Concurrent graph-query serving engine: micro-batching + result cache.
+
+The paper's deployment model (§3.1, threadleR) is a resident in-memory
+network answering streams of small queries from many clients. Executing
+those one call at a time wastes the batched query engine: every request
+pays its own host-side bucket planning and device dispatch. This module
+is the serving layer over the degree-bucketed dispatch (core/dispatch.py)
+and the batched traversal engine (core/traversal.py):
+
+* **Micro-batching** — requests of the same kind and compatible static
+  arguments (layer selection, ``k``, ``max_alters``, filter fingerprint)
+  are coalesced from the queue into ONE batched dispatch; results scatter
+  back per request id. Every supported query is row-independent under
+  batching, so a coalesced result is bit-identical to the same request
+  served alone (``run_request``) — the property the ``serve_perf``
+  benchmark asserts over a mixed 10k-request trace.
+* **Result cache** — an LRU keyed on ``(kind, layer selection,
+  canonicalized args, filter fingerprint)`` with hit/miss/eviction stats.
+  Any mutating op (``set_attr``, ``delete_layer``, ``import_layer``,
+  ``update_network``) invalidates the whole cache: a served query never
+  returns a result computed against a previous network.
+* **Backpressure** — two bounded queues split request kinds by cost:
+  point queries (``getedge``, ``alters``, ``degree``) and heavy traversal
+  (``khop``, ``walkbatch``). Each pump round drains the point queue first
+  and caps heavy work, so a flood of ``khop`` requests fills *its own*
+  queue (``QueueFull`` for the flooder) while point queries keep flowing.
+
+Request kinds (the trace-file / ``submit`` schema; scalars or id-lists):
+
+    {"kind": "getedge",   "layer": L, "u": i, "v": j}
+    {"kind": "alters",    "u": i [, "layers": [...]] [, "max_alters": m]}
+    {"kind": "degree",    "u": i|[ids] [, "layers": [...]]}
+    {"kind": "khop",      "sources": i|[ids], "k": h [, "max_frontier": f]
+                          [, "layers": [...]]}
+    {"kind": "walkbatch", "starts": i|[ids], "steps": n [, "walkers": w]
+                          [, "seed": s] [, "layers": [...]]
+                          [, "layer_weights": [...]]}
+
+plus an optional ``"filter"``: a NodeSelection, a bool mask, or a spec
+``{"attr": a, "op": eq|ne|lt|le|gt|ge|has [, "value": v]}`` resolved
+against the network's attribute store (§3.1 register-analysis filters).
+
+Thread-safety: ``submit`` / ``result`` are safe from many client threads;
+``start()`` runs the pump loop on a background thread (one thread owns
+all device dispatch). Single-threaded callers use ``serve()`` which
+submits + pumps synchronously.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import threading
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Any, Iterable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.nodeset import node_filter_mask
+
+__all__ = [
+    "GraphServeEngine",
+    "QueryResult",
+    "QueueFull",
+    "POINT_KINDS",
+    "HEAVY_KINDS",
+    "REQUEST_KINDS",
+    "run_request",
+    "assert_results_equal",
+    "canonical_request",
+    "parse_trace",
+    "load_trace",
+]
+
+POINT_KINDS = ("getedge", "alters", "degree")
+HEAVY_KINDS = ("khop", "walkbatch")
+REQUEST_KINDS = POINT_KINDS + HEAVY_KINDS
+
+_DEFAULT_MAX_ALTERS = 4096
+
+
+class QueueFull(RuntimeError):
+    """Bounded-queue backpressure: the request's cost class is saturated."""
+
+
+@dataclass
+class QueryResult:
+    """One served result.
+
+    ``value`` may be SHARED with other requests (LRU hits and coalesced
+    duplicates return the stored object, not a copy) — treat it as
+    read-only; mutating it in place would corrupt what later cache hits
+    receive. ``to_record()`` materializes an independent JSON-safe copy.
+    """
+
+    rid: int
+    kind: str
+    value: Any
+    cached: bool = False
+    error: str | None = None
+
+    def to_record(self) -> dict:
+        rec = {"id": self.rid, "kind": self.kind, "cached": self.cached}
+        if self.error is not None:
+            rec["error"] = self.error
+        else:
+            rec["result"] = _pythonic(self.value)
+        return rec
+
+
+def _pythonic(v):
+    """Canonical result -> JSON-friendly python (lists / scalars).
+
+    Sibling of ``core/cli.py::_jsonable`` (which additionally maps
+    engine-object types like NodeSelection that never appear in
+    canonical serve results)."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, dict):
+        return {k: _pythonic(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_pythonic(x) for x in v]
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Request canonicalization
+# ---------------------------------------------------------------------------
+
+
+def _canon_ids(x, *, what: str) -> tuple[int, ...]:
+    """Scalar id or id-list -> tuple of ints (the canonical batch form)."""
+    if isinstance(x, (list, tuple, np.ndarray)):
+        ids = tuple(int(i) for i in np.asarray(x).reshape(-1))
+        if not ids:
+            raise ValueError(f"{what} must not be empty")
+        return ids
+    return (int(x),)
+
+
+def _canon_layers(net, layers) -> tuple[str, ...] | None:
+    if layers is None:
+        return None
+    names = tuple(
+        str(n) for n in (layers if isinstance(layers, (list, tuple)) else [layers])
+    )
+    for n in names:
+        net.layer(n)  # raises KeyError on unknown layers at submit time
+    return names
+
+
+def _filter_fingerprint(mask: np.ndarray | None) -> str | None:
+    """Stable content hash of a filter mask (cache-key component)."""
+    if mask is None:
+        return None
+    return hashlib.blake2b(mask.tobytes(), digest_size=16).hexdigest()
+
+
+def _spec_memo_key(spec) -> tuple | None:
+    """Hashable memo key for a dict filter spec; None = not memoizable."""
+    if isinstance(spec, dict):
+        return (
+            "attrspec", str(spec.get("attr")), str(spec.get("op")),
+            spec.get("value"),
+        )
+    return None
+
+
+_FILTER_MEMO_MAX = 256
+
+
+def _resolve_filter(net, spec, memo: dict | None = None, gen: int = 0):
+    """Filter spec -> (bool mask ndarray | None, fingerprint | None).
+
+    Resolving a dict spec walks the attribute store and hashes an
+    O(n_nodes) mask — too much host work to repeat per request on the
+    serve hot path, so the engine passes a ``memo`` dict keyed on the
+    spec. Entries are tagged with the engine generation ``gen`` they
+    were resolved under: a mutation bumps the generation, so a mask
+    memoized concurrently with (or before) the mutation can never
+    satisfy a post-mutation lookup.
+    """
+    if spec is None:
+        return None, None
+    key = _spec_memo_key(spec) if memo is not None else None
+    if key is not None:
+        try:
+            hit = memo.get(key)
+        except TypeError:  # unhashable value in the spec: skip the memo
+            key = None
+        else:
+            if hit is not None and hit[0] == gen:
+                return hit[1], hit[2]
+    if isinstance(spec, dict):
+        sel = net.nodeset.select(
+            str(spec["attr"]), str(spec["op"]), spec.get("value")
+        )
+        mask = sel.mask
+    else:
+        mask = np.asarray(node_filter_mask(spec, net.n_nodes), dtype=bool)
+    fp = _filter_fingerprint(mask)
+    if key is not None:
+        if len(memo) >= _FILTER_MEMO_MAX:
+            memo.clear()
+        memo[key] = (gen, mask, fp)
+    return mask, fp
+
+
+@dataclass(frozen=True)
+class _CanonRequest:
+    """A request after canonicalization: hashable keys + dispatch args."""
+
+    kind: str
+    group_key: tuple        # static args shared by a coalescible batch
+    cache_key: tuple        # group_key + per-request args
+    ids: tuple[int, ...]    # the batchable id payload (u / sources / ...)
+    ids2: tuple[int, ...]   # second id payload (getedge v), else ()
+    mask: np.ndarray | None = field(compare=False, hash=False, default=None)
+
+
+def canonical_request(
+    net, req: dict, *, _filter_memo: dict | None = None, _gen: int = 0,
+) -> _CanonRequest:
+    """Validate + canonicalize one request dict against ``net``.
+
+    Raises ``ValueError`` / ``KeyError`` on malformed requests — the
+    engine converts those to per-request error results so one bad client
+    cannot poison a batch. ``_filter_memo`` / ``_gen`` are the engine's
+    per-generation filter-resolution memo (see ``_resolve_filter``); the
+    per-call reference path (``run_request``) leaves them unset.
+    """
+    kind = str(req.get("kind", ""))
+    if kind not in REQUEST_KINDS:
+        raise ValueError(
+            f"unknown request kind {kind!r}; have {REQUEST_KINDS}"
+        )
+    mask, fp = _resolve_filter(net, req.get("filter"), _filter_memo, _gen)
+
+    if kind == "getedge":
+        layer = str(req["layer"])
+        net.layer(layer)
+        u, v = (int(req["u"]),), (int(req["v"]),)
+        gk = (kind, layer, fp)
+        return _CanonRequest(kind, gk, gk + (u, v), u, v, mask)
+
+    if kind == "alters":
+        layers = _canon_layers(net, req.get("layers"))
+        m = int(req.get("max_alters", _DEFAULT_MAX_ALTERS))
+        if m < 1:
+            raise ValueError(f"max_alters must be >= 1, got {m}")
+        u = (int(req["u"]),)
+        gk = (kind, layers, m, fp)
+        return _CanonRequest(kind, gk, gk + (u,), u, (), mask)
+
+    if kind == "degree":
+        layers = _canon_layers(net, req.get("layers"))
+        u = _canon_ids(req["u"], what="u")
+        gk = (kind, layers, fp)
+        return _CanonRequest(kind, gk, gk + (u,), u, (), mask)
+
+    if kind == "khop":
+        layers = _canon_layers(net, req.get("layers"))
+        k = int(req["k"])
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        mf = req.get("max_frontier")
+        mf = None if mf is None else int(mf)
+        src = _canon_ids(req["sources"], what="sources")
+        gk = (kind, layers, k, mf, fp)
+        return _CanonRequest(kind, gk, gk + (src,), src, (), mask)
+
+    # walkbatch — RNG state couples rows across a batch, so each distinct
+    # request is its own dispatch group (identical requests still dedup
+    # through the cache); results stay bit-identical to the per-call loop.
+    layers = _canon_layers(net, req.get("layers"))
+    steps = int(req["steps"])
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    walkers = int(req.get("walkers", 1))
+    seed = int(req.get("seed", 0))
+    weights = req.get("layer_weights")
+    weights = (
+        None if weights is None
+        else tuple(float(w) for w in np.atleast_1d(weights))
+    )
+    starts = _canon_ids(req["starts"], what="starts")
+    gk = (kind, layers, steps, walkers, seed, weights, fp, starts)
+    return _CanonRequest(kind, gk, gk, starts, (), mask)
+
+
+# ---------------------------------------------------------------------------
+# Batched group executors (one device dispatch per coalesced group)
+# ---------------------------------------------------------------------------
+
+
+def _exec_getedge(net, group_key, creqs):
+    _, layer_name, _ = group_key
+    layer = net.layer(layer_name)
+    u = jnp.asarray([c.ids[0] for c in creqs], jnp.int32)
+    v = jnp.asarray([c.ids2[0] for c in creqs], jnp.int32)
+    nf = creqs[0].mask
+    vals = np.asarray(layer.edge_value(u, v, node_filter=nf))
+    return [float(vals[i]) for i in range(len(creqs))]
+
+
+def _exec_alters(net, group_key, creqs):
+    _, layers, max_alters, _ = group_key
+    u = jnp.asarray([c.ids[0] for c in creqs], jnp.int32)
+    vals, mask = net.node_alters(
+        u, max_alters, layers, node_filter=creqs[0].mask
+    )
+    vals, mask = np.asarray(vals), np.asarray(mask)
+    return [vals[i][mask[i]] for i in range(len(creqs))]
+
+
+def _exec_degree(net, group_key, creqs):
+    _, layers, _ = group_key
+    flat = [i for c in creqs for i in c.ids]
+    out = np.asarray(net.degree(
+        jnp.asarray(flat, jnp.int32), layers, node_filter=creqs[0].mask
+    ))
+    res, lo = [], 0
+    for c in creqs:
+        hi = lo + len(c.ids)
+        res.append(int(out[lo]) if len(c.ids) == 1 else out[lo:hi].astype(int))
+        lo = hi
+    return res
+
+
+def _exec_khop(net, group_key, creqs):
+    from repro.core.traversal import khop_records
+
+    _, layers, k, mf, _ = group_key
+    flat = [s for c in creqs for s in c.ids]
+    nodes, mask, hops = net.khop(
+        jnp.asarray(flat, jnp.int32), k, max_frontier=mf,
+        layer_names=layers, node_filter=creqs[0].mask,
+    )
+    records = khop_records(flat, nodes, mask, hops)
+    res, lo = [], 0
+    for c in creqs:
+        hi = lo + len(c.ids)
+        res.append(records[lo:hi])
+        lo = hi
+    return res
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps", "walkers", "layer_names", "layer_weights"),
+)
+def _walk_exec(net, starts, key, nf, *, steps, walkers, layer_names,
+               layer_weights):
+    """Jitted walk-fleet executor shared by the engine and ``run_request``.
+
+    An eager ``random_walk_batch`` re-traces its scan per call — fatal at
+    serving rates. Serve-trace walk shapes recur (starts length, steps,
+    walkers, layer selection), so each recurring shape compiles once and
+    every later dispatch is a cache hit; using the SAME executor on both
+    paths keeps served results bit-identical to the per-call loop.
+    """
+    from repro.core.traversal import random_walk_batch
+
+    return random_walk_batch(
+        net, starts, steps, key, walkers_per_start=walkers,
+        layer_names=layer_names, layer_weights=layer_weights,
+        node_filter=nf,
+    )
+
+
+def _exec_walkbatch(net, group_key, creqs):
+    _, layers, steps, walkers, seed, weights, _, starts = group_key
+    paths = _walk_exec(
+        net, jnp.asarray(starts, jnp.int32), jax.random.PRNGKey(seed),
+        creqs[0].mask, steps=steps, walkers=walkers, layer_names=layers,
+        layer_weights=weights,
+    )
+    return [np.asarray(paths, dtype=np.int32)] * len(creqs)
+
+
+_EXECUTORS = {
+    "getedge": _exec_getedge,
+    "alters": _exec_alters,
+    "degree": _exec_degree,
+    "khop": _exec_khop,
+    "walkbatch": _exec_walkbatch,
+}
+
+
+def run_request(net, req: dict):
+    """Execute ONE request with no queue, no coalescing, no cache.
+
+    This is the one-call-at-a-time reference the engine's micro-batched
+    results are bit-identical to (and the ``serve_perf`` baseline).
+    """
+    c = canonical_request(net, req)
+    return _EXECUTORS[c.kind](net, c.group_key, [c])[0]
+
+
+def assert_results_equal(a, b) -> None:
+    """Deep bit-identity between two canonical request results.
+
+    The checkable form of the engine's contract (served == per-call
+    reference); used by the ``serve_perf`` benchmark and the test suite.
+    """
+    assert type(a) is type(b), (type(a), type(b))
+    if isinstance(a, dict):
+        assert a.keys() == b.keys()
+        for k in a:
+            assert_results_equal(a[k], b[k])
+    elif isinstance(a, list):
+        assert len(a) == len(b), (len(a), len(b))
+        for x, y in zip(a, b):
+            assert_results_equal(x, y)
+    elif isinstance(a, np.ndarray):
+        np.testing.assert_array_equal(a, b)
+    else:
+        assert a == b, (a, b)
+
+
+# ---------------------------------------------------------------------------
+# LRU result cache
+# ---------------------------------------------------------------------------
+
+
+class _ResultCache:
+    """LRU over canonical results with hit/miss/eviction/invalidation stats."""
+
+    def __init__(self, capacity: int):
+        self.capacity = max(int(capacity), 0)
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def get(self, key):
+        if self.capacity == 0:
+            self.misses += 1
+            return None
+        hit = self._d.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key, value) -> None:
+        if self.capacity == 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self) -> None:
+        self._d.clear()
+        self.invalidations += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def stats(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "entries": len(self._d),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Pending:
+    rid: int
+    creq: _CanonRequest
+    raw: dict  # original request — re-canonicalized if the net mutates
+    gen: int = 0  # engine generation the canonicalization ran against
+
+
+class GraphServeEngine:
+    """Resident network + bounded queues + micro-batcher + result cache.
+
+    >>> eng = net.serve_session()
+    >>> rid = eng.submit({"kind": "degree", "u": 7})
+    >>> eng.pump()
+    >>> eng.result(rid).value
+    """
+
+    def __init__(
+        self,
+        net,
+        *,
+        cache_size: int = 4096,
+        queue_limit: int = 8192,
+        heavy_queue_limit: int | None = None,
+        max_heavy_per_round: int = 1024,
+        result_limit: int = 65536,
+    ):
+        self.net = net
+        self._cache = _ResultCache(cache_size)
+        self._queue_limit = max(int(queue_limit), 1)
+        self._heavy_limit = max(int(
+            queue_limit if heavy_queue_limit is None else heavy_queue_limit
+        ), 1)
+        self._generation = 0
+        self._max_heavy = max(int(max_heavy_per_round), 1)
+        # Uncollected-result bound: a fire-and-forget client that submits
+        # but never calls result() must not grow self._results without
+        # limit — overflow drops the oldest-stored result (counted in
+        # stats["results_dropped"]). Clamped so serve()'s incremental
+        # collection (window result_limit/2 + one full round) always
+        # fits: its own results can never be the ones dropped.
+        self._result_limit = max(
+            int(result_limit),
+            2 * (self._queue_limit + self._heavy_limit),
+        )
+        self._results_dropped = 0
+        # rids a serve() replay is committed to collecting: exempt from
+        # the overflow trim so a concurrent fire-and-forget flood can
+        # never drop (and deadlock) an in-progress replay's results
+        self._claimed: set[int] = set()
+        self._point: deque[_Pending] = deque()
+        self._heavy: deque[_Pending] = deque()
+        self._results: dict[int, QueryResult] = {}
+        self._next_rid = 0
+        self._served = 0
+        self._batches: dict[str, int] = {k: 0 for k in REQUEST_KINDS}
+        self._dispatched: dict[str, int] = {k: 0 for k in REQUEST_KINDS}
+        self._rejected = 0
+        self._coalesced_dupes = 0
+        self._filter_memo: dict = {}
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._done = threading.Condition(self._lock)
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(
+        self, request: dict, *,
+        _count_rejection: bool = True, _claim: bool = False,
+    ) -> int:
+        """Enqueue one request; returns its id.
+
+        Raises ``QueueFull`` when the request's cost class is saturated
+        (bounded-queue backpressure) and ``ValueError`` / ``KeyError`` on
+        malformed requests. ``rejected`` in :attr:`stats` counts the
+        rejections the client saw; ``serve``'s internal retry loop opts
+        out (``_count_rejection=False``) since it absorbs the raise.
+        """
+        with self._lock:
+            gen, net = self._generation, self.net
+        # canonicalization (filter resolution can touch the attribute
+        # store) runs outside the lock; if a mutation lands in between,
+        # the enqueued snapshot ``gen`` no longer matches and pump()
+        # re-canonicalizes against the current network at pop time —
+        # the same path every queued-then-mutated request takes
+        creq = canonical_request(
+            net, request, _filter_memo=self._filter_memo, _gen=gen
+        )
+        q, limit = (
+            (self._point, self._queue_limit)
+            if creq.kind in POINT_KINDS
+            else (self._heavy, self._heavy_limit)
+        )
+        with self._lock:
+            if len(q) >= limit:
+                if _count_rejection:
+                    self._rejected += 1
+                raise QueueFull(
+                    f"{creq.kind!r} queue at limit ({limit}); drain "
+                    "with pump() or raise queue_limit"
+                )
+            rid = self._next_rid
+            self._next_rid += 1
+            if _claim:
+                self._claimed.add(rid)
+            q.append(_Pending(rid, creq, dict(request), gen))
+            self._work.notify()
+        return rid
+
+    def result(
+        self, rid: int, *, timeout: float | None = None
+    ) -> QueryResult | None:
+        """Pop a finished result; with the background pump running, blocks
+        up to ``timeout`` for it (None = non-blocking when no thread)."""
+        with self._lock:
+            if self._thread is not None and timeout is not None:
+                self._done.wait_for(
+                    lambda: rid in self._results, timeout=timeout
+                )
+            return self._results.pop(rid, None)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._point) + len(self._heavy)
+
+    # -- micro-batching ------------------------------------------------------
+
+    def pump(self) -> int:
+        """One scheduling round: drain the point queue and up to
+        ``max_heavy_per_round`` heavy requests, coalesce, dispatch,
+        scatter. Returns the number of requests served."""
+        with self._lock:
+            batch = list(self._point)
+            self._point.clear()
+            for _ in range(min(self._max_heavy, len(self._heavy))):
+                batch.append(self._heavy.popleft())
+            net, generation = self.net, self._generation
+        if not batch:
+            return 0
+
+        # requests canonicalized against an older network re-resolve here,
+        # at pop time and outside the lock (a mutation sweep re-resolving
+        # thousands of filter specs under the lock would stall every
+        # client): filter specs bind to the popped network, and a request
+        # this network can't satisfy becomes a per-request error result
+        finished: list[QueryResult] = []
+        live: list[_Pending] = []
+        for p in batch:
+            if p.gen == generation:
+                live.append(p)
+                continue
+            try:
+                p.creq = canonical_request(
+                    net, p.raw,
+                    _filter_memo=self._filter_memo, _gen=generation,
+                )
+                p.gen = generation
+                live.append(p)
+            except Exception as e:
+                finished.append(QueryResult(
+                    p.rid, p.creq.kind, None,
+                    error=f"{type(e).__name__}: {e}",
+                ))
+        batch = live
+
+        # cache pass + group the misses (dedup identical in-flight keys)
+        jobs: dict[tuple, list[_Pending]] = {}
+        with self._lock:
+            for p in batch:
+                hit = self._cache.get(p.creq.cache_key)
+                if hit is not None:
+                    finished.append(
+                        QueryResult(p.rid, p.creq.kind, hit, cached=True)
+                    )
+                else:
+                    jobs.setdefault(p.creq.cache_key, []).append(p)
+
+        groups: dict[tuple, list[tuple[tuple, _CanonRequest]]] = {}
+        for key, ps in jobs.items():
+            groups.setdefault(ps[0].creq.group_key, []).append(
+                (key, ps[0].creq)
+            )
+        for group_key, entries in groups.items():
+            kind = group_key[0]
+            creqs = [c for _, c in entries]
+            try:
+                values = _EXECUTORS[kind](net, group_key, creqs)
+                errs = [None] * len(values)
+            except Exception as e:  # surface per request, don't kill the pump
+                values = [None] * len(entries)
+                errs = [f"{type(e).__name__}: {e}"] * len(entries)
+            with self._lock:
+                self._batches[kind] += 1
+                self._dispatched[kind] += len(entries)
+                # a mutation that landed mid-dispatch invalidated the
+                # cache; this batch's results were computed against the
+                # pre-mutation network and must not re-enter it
+                cacheable = self._generation == generation
+                for (key, _), val, err in zip(entries, values, errs):
+                    if err is None and cacheable:
+                        self._cache.put(key, val)
+                    # duplicates coalesced into this job share the result
+                    # without recomputation — flagged cached like LRU hits
+                    # (a failed dispatch shared nothing: plain error records)
+                    for i, p in enumerate(jobs[key]):
+                        shared = i > 0 and err is None
+                        if shared:
+                            self._coalesced_dupes += 1
+                        finished.append(
+                            QueryResult(p.rid, kind, val, cached=shared,
+                                        error=err)
+                        )
+
+        with self._lock:
+            for r in finished:
+                self._results[r.rid] = r
+            # bound the store against fire-and-forget clients: drop the
+            # oldest-stored results first (insertion-ordered dict),
+            # skipping rids an in-progress serve() replay has claimed —
+            # one scan per round, not one per drop (claimed entries sit
+            # at the front and would make repeated next() quadratic)
+            excess = len(self._results) - self._result_limit
+            if excess > 0:
+                victims = []
+                for k in self._results:
+                    if k not in self._claimed:
+                        victims.append(k)
+                        if len(victims) == excess:
+                            break
+                for k in victims:
+                    self._results.pop(k)
+                self._results_dropped += len(victims)
+            self._served += len(finished)
+            self._done.notify_all()
+        return len(finished)
+
+    def serve(self, requests: Iterable[dict]) -> list[QueryResult]:
+        """Submit a request stream and pump until every result is in;
+        results return in request order. Queue saturation triggers an
+        inline pump — or, with the background pump running, a wait for
+        it to drain (what a threadleR client sees as backpressure); a
+        malformed request becomes a per-request error result instead of
+        aborting the replay (one bad trace line can't drop the rest)."""
+        rids: list[int] = []
+        collected: dict[int, QueryResult] = {}
+        threaded = self._thread is not None
+        next_i = 0  # oldest rid index not yet known-collected
+
+        def drain(max_outstanding: int) -> None:
+            # collect oldest-first until at most max_outstanding of our
+            # rids remain in the store — keeps this replay's footprint
+            # bounded by the collection window, not the trace length,
+            # so its results are never the ones result_limit drops
+            nonlocal next_i
+            with self._lock:
+                while len(rids) - len(collected) > max_outstanding:
+                    while rids[next_i] in collected:
+                        next_i += 1  # malformed-request records land in
+                        # `collected` directly, out of pointer order
+                    r = rids[next_i]
+                    if threaded:
+                        self._done.wait_for(lambda: r in self._results)
+                    elif r not in self._results:
+                        break  # not served yet; a later pump round is
+                    collected[r] = self._results.pop(r)
+                    self._claimed.discard(r)
+
+        window = max(self._result_limit // 2, 1)
+        try:
+            self._serve_loop(requests, rids, collected, drain, window,
+                             threaded)
+            drain(0)
+            return [collected[r] for r in rids]
+        finally:
+            with self._lock:  # an aborted replay must not pin the store
+                self._claimed.difference_update(rids)
+
+    def _serve_loop(
+        self, requests, rids, collected, drain, window, threaded,
+    ) -> None:
+        for req in requests:
+            while True:
+                try:
+                    rids.append(self.submit(
+                        req, _count_rejection=False, _claim=True,
+                    ))
+                    break
+                except QueueFull:
+                    if threaded:
+                        # background pump owns all device dispatch: wait
+                        # for a round to drain queue space instead of
+                        # pumping from this thread (timeout guards the
+                        # round that finished before we started waiting)
+                        with self._lock:
+                            self._done.wait(timeout=0.05)
+                    else:
+                        self.pump()
+                        drain(window)
+                except (ValueError, KeyError, TypeError, AttributeError) as e:
+                    # produced synchronously: goes straight to collected,
+                    # never through the bounded result store (error floods
+                    # must not trigger trims that drop our own results)
+                    with self._lock:
+                        rid = self._next_rid
+                        self._next_rid += 1
+                        self._served += 1
+                    kind = str(req.get("kind", "")) if isinstance(
+                        req, dict
+                    ) else ""
+                    collected[rid] = QueryResult(
+                        rid, kind, None,
+                        error=f"{type(e).__name__}: {e}",
+                    )
+                    rids.append(rid)
+                    break
+            if threaded:
+                drain(window)
+        if not threaded:
+            while self.pending:
+                self.pump()
+        # caller's drain(0) collects the tail — with the background pump,
+        # it waits out batches in flight (pending can read 0 meanwhile)
+
+    # -- background pump -----------------------------------------------------
+
+    def start(self) -> "GraphServeEngine":
+        """Run the pump loop on a daemon thread (one thread owns dispatch)."""
+        if self._thread is not None:
+            return self
+        self._stopping = False
+
+        def loop():
+            while True:
+                with self._lock:
+                    self._work.wait_for(
+                        lambda: self._stopping
+                        or self._point or self._heavy
+                    )
+                    if self._stopping and not (self._point or self._heavy):
+                        return
+                self.pump()
+
+        self._thread = threading.Thread(
+            target=loop, name="graph-serve-pump", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        with self._lock:
+            self._stopping = True
+            self._work.notify_all()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "GraphServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- mutating ops (explicit cache invalidation) --------------------------
+
+    def update_network(self, net) -> None:
+        """Rebind the resident network; every cached result is dropped.
+
+        Bumping the generation lazily re-canonicalizes queued requests at
+        pop time (``pump``), so a filter spec resolved at submit time
+        never executes with a pre-mutation mask, and a queued request the
+        new network can't satisfy (e.g. its layer was deleted) turns into
+        a per-request error result when dispatched. In-flight batches
+        deliver results computed against the network they were popped
+        under (the request happened before the mutation) but never
+        re-enter the cache — ``pump`` checks the generation before
+        ``put``.
+        """
+        with self._lock:
+            self.net = net
+            self._cache.invalidate()
+            self._filter_memo.clear()
+            self._generation += 1
+
+    def set_attr(self, name: str, nodes, values, kind: str | None = None):
+        from repro.core import api
+
+        self.update_network(
+            api.setnodeattr(self.net, name, nodes, values, kind=kind)
+        )
+        return self.net
+
+    def delete_layer(self, name: str):
+        from repro.core import api
+
+        self.update_network(api.deletelayer(self.net, name))
+        return self.net
+
+    def import_layer(self, name: str, file: str, **kw):
+        from repro.core import api
+
+        self.update_network(api.importlayer(self.net, name, file, **kw))
+        return self.net
+
+    # -- stats ---------------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "served": self._served,
+                "rejected": self._rejected,
+                "coalesced_dupes": self._coalesced_dupes,
+                "pending_point": len(self._point),
+                "pending_heavy": len(self._heavy),
+                "uncollected": len(self._results),
+                "results_dropped": self._results_dropped,
+                "batches": dict(self._batches),
+                "dispatched": dict(self._dispatched),
+                "cache": self._cache.stats(),
+            }
+
+
+# ---------------------------------------------------------------------------
+# Trace files (the threadleR client format)
+# ---------------------------------------------------------------------------
+
+
+def parse_trace(text: str) -> list[dict]:
+    """Parse a request trace: one JSON object per line; ``#`` comments and
+    blank lines are skipped. See the module docstring for the schema."""
+    import json
+
+    out = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        try:
+            req = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"trace line {ln}: bad JSON ({e})") from None
+        if not isinstance(req, dict):
+            raise ValueError(f"trace line {ln}: expected an object")
+        out.append(req)
+    return out
+
+
+def load_trace(path: str) -> list[dict]:
+    with open(path) as f:
+        return parse_trace(f.read())

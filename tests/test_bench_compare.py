@@ -1,0 +1,152 @@
+"""benchmarks/compare.py — the CI benchmark-regression gate."""
+
+import importlib.util
+import json
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    Path(__file__).parent.parent / "benchmarks" / "compare.py",
+)
+compare = importlib.util.module_from_spec(_SPEC)
+sys.modules["bench_compare"] = compare
+_SPEC.loader.exec_module(compare)
+
+
+def _write(d: Path, name: str, rows: dict) -> None:
+    (d / name).write_text(json.dumps(rows))
+
+
+@pytest.fixture()
+def dirs(tmp_path, monkeypatch):
+    tracked = tmp_path / "tracked"
+    current = tmp_path / "current"
+    tracked.mkdir()
+    current.mkdir()
+    # narrow the pair table to one controlled pair: tracked full-size ratio
+    # 10x (written per test), smoke reference ratio 4x
+    monkeypatch.setattr(
+        compare, "PAIRS",
+        [("BENCH_9.json", "work/base", "work/fast", 4.0)],
+    )
+    return tracked, current
+
+
+def test_smoke_within_band_passes(dirs):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    _write(current, "BENCH_9_smoke.json",
+           {"work/base": 50.0, "work/fast": 15.0})  # 3.3x vs 4x smoke ref
+    rows, ok = compare.compare(tracked, current, "_smoke", 0.30)
+    assert ok and rows[0]["status"] == "ok"
+    assert rows[0]["tracked_x"] == pytest.approx(10.0)
+    assert rows[0]["current_x"] == pytest.approx(50.0 / 15.0)
+    assert rows[0]["floor_x"] == pytest.approx(0.7 * 4.0)
+
+
+def test_smoke_regression_fails(dirs):
+    tracked, current = dirs
+    # smoke ratio collapsed to 2x: below the 2.8x smoke floor
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    _write(current, "BENCH_9_smoke.json",
+           {"work/base": 100.0, "work/fast": 50.0})
+    rows, ok = compare.compare(tracked, current, "_smoke", 0.30)
+    assert not ok and rows[0]["status"] == "REGRESSION"
+
+
+def test_full_run_gates_against_tracked_ratio(dirs):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    # 6x would pass the smoke reference but regresses the tracked 10x
+    # (headroom=1.0 isolates the tracked-ratio path from runner slack)
+    _write(current, "BENCH_9.json", {"work/base": 60.0, "work/fast": 10.0})
+    rows, ok = compare.compare(tracked, current, "", 0.30, 1.0)
+    assert not ok and rows[0]["status"] == "REGRESSION"
+    assert rows[0]["floor_x"] == pytest.approx(7.0)
+    # within the band: 8x against tracked 10x
+    _write(current, "BENCH_9.json", {"work/base": 80.0, "work/fast": 10.0})
+    _, ok = compare.compare(tracked, current, "", 0.30, 1.0)
+    assert ok
+
+
+def test_full_run_default_headroom_absorbs_runner_variance(dirs):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    # 6x on a slower runner: fails at headroom 1.0 (above), passes the
+    # default 0.5 headroom (floor 3.5x) — real collapses (e.g. 2x) still fail
+    _write(current, "BENCH_9.json", {"work/base": 60.0, "work/fast": 10.0})
+    rows, ok = compare.compare(tracked, current, "", 0.30)
+    assert ok and rows[0]["floor_x"] == pytest.approx(3.5)
+    _write(current, "BENCH_9.json", {"work/base": 20.0, "work/fast": 10.0})
+    _, ok = compare.compare(tracked, current, "", 0.30)
+    assert not ok
+
+
+def test_missing_sidecar_fails(dirs):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    rows, ok = compare.compare(tracked, current, "_smoke", 0.30)
+    assert not ok and "MISSING" in rows[0]["status"]
+
+
+def test_missing_tracked_record_is_skipped(dirs):
+    tracked, current = dirs
+    _write(current, "BENCH_9_smoke.json", {"work/base": 1.0, "work/fast": 1.0})
+    rows, ok = compare.compare(tracked, current, "_smoke", 0.30)
+    assert ok and rows[0]["status"] == "NO TRACKED RECORD"
+
+
+def test_pair_dropped_from_current_run_fails(dirs):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    _write(current, "BENCH_9_smoke.json", {"work/base": 100.0})
+    rows, ok = compare.compare(tracked, current, "_smoke", 0.30)
+    assert not ok and rows[0]["status"] == "PAIR NOT IN CURRENT RUN"
+
+
+def test_main_prints_table_and_exit_codes(dirs, capsys):
+    tracked, current = dirs
+    _write(tracked, "BENCH_9.json", {"work/base": 100.0, "work/fast": 10.0})
+    _write(current, "BENCH_9_smoke.json",
+           {"work/base": 100.0, "work/fast": 20.0})  # 5x > 2.8x floor
+    argv = ["--tracked-dir", str(tracked), "--current-dir", str(current),
+            "--suffix", "_smoke"]
+    assert compare.main(argv) == 0
+    out = capsys.readouterr().out
+    assert "work/base / work/fast" in out and "ok" in out
+    _write(current, "BENCH_9_smoke.json",
+           {"work/base": 100.0, "work/fast": 99.0})
+    assert compare.main(argv) == 1
+
+
+def test_real_pair_table_matches_tracked_records():
+    """Every gated pair must exist in its tracked record (BENCH_5 included),
+    so the gate can never silently skip a family; tracked full-size
+    ratios must clear their own smoke reference (sanity on the refs)."""
+    bench_dir = Path(__file__).parent.parent / "benchmarks"
+    for fname, base, opt, smoke_ref in compare.PAIRS:
+        tracked = json.loads((bench_dir / fname).read_text())
+        assert base in tracked, (fname, base)
+        assert opt in tracked, (fname, opt)
+        assert tracked[base] / tracked[opt] > 1.0, (fname, base, opt)
+        assert smoke_ref > 0.0
+
+
+@pytest.mark.skipif(
+    os.environ.get("BENCH_SMOKE_GATE") != "1",
+    reason="opt-in (BENCH_SMOKE_GATE=1): gates on sidecars from a fresh "
+    "`python benchmarks/run.py --smoke`; stale local sidecars from an "
+    "older checkout would fail runs that regressed nothing",
+)
+def test_gate_passes_on_the_real_smoke_sidecars():
+    """The real gate must pass against freshly generated smoke sidecars
+    (what CI's bench-smoke job runs via compare.py directly)."""
+    bench_dir = Path(__file__).parent.parent / "benchmarks"
+    if not any(bench_dir.glob("BENCH_*_smoke.json")):
+        pytest.skip("no smoke sidecars present")
+    rows, ok = compare.compare(bench_dir, bench_dir, "_smoke", 0.30)
+    assert ok, rows

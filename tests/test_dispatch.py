@@ -226,3 +226,59 @@ def test_node_max_hyperedge_size(skewed):
         hes = indices[indptr[u] : indptr[u + 1]]
         want = int(sizes[hes].max()) if hes.size else 0
         assert per_node[u] == want
+
+
+def test_node_width_cache_evicts_oldest_not_everything():
+    """Regression: overflowing the per-layer width cache used to clear it
+    wholesale, so >64-layer workloads (TemporalNetwork.window over many
+    years) recomputed every width table per query. Overflow must evict
+    only the oldest-inserted entry and keep recent layers warm."""
+    cap = dispatch._NODE_WIDTH_CACHE_MAX
+
+    def tiny_layer(seed):
+        rng = np.random.default_rng(seed)
+        return two_mode_from_memberships(
+            40, 6, rng.integers(0, 40, 60), rng.integers(0, 6, 60)
+        )
+
+    layers = [tiny_layer(s) for s in range(cap + 8)]
+    dispatch._NODE_WIDTH_CACHE.clear()
+    tables = [dispatch.node_max_hyperedge_size(l) for l in layers]
+    assert len(dispatch._NODE_WIDTH_CACHE) == cap
+    # the 8 oldest were evicted one at a time; everything newer stays
+    for i, layer in enumerate(layers):
+        key = id(layer.memb.indices)
+        assert (key in dispatch._NODE_WIDTH_CACHE) == (i >= 8)
+    # warm entries return the cached array by identity (no recompute)
+    for i in range(8, len(layers)):
+        again = dispatch.node_max_hyperedge_size(layers[i])
+        assert again is tables[i]
+    # re-querying an evicted layer recomputes correctly and re-inserts
+    re0 = dispatch.node_max_hyperedge_size(layers[0])
+    np.testing.assert_array_equal(re0, tables[0])
+    assert id(layers[0].memb.indices) in dispatch._NODE_WIDTH_CACHE
+
+
+def test_node_width_cache_hit_promotes_hot_layer():
+    """LRU, not plain FIFO: a layer that keeps getting hit must survive
+    a full cap's worth of churn from other layers."""
+    cap = dispatch._NODE_WIDTH_CACHE_MAX
+
+    def tiny_layer(seed):
+        rng = np.random.default_rng(seed)
+        return two_mode_from_memberships(
+            40, 6, rng.integers(0, 40, 60), rng.integers(0, 6, 60)
+        )
+
+    dispatch._NODE_WIDTH_CACHE.clear()
+    hot = tiny_layer(1000)
+    hot_table = dispatch.node_max_hyperedge_size(hot)
+    churn = [tiny_layer(s) for s in range(cap - 1)]
+    for layer in churn:  # interleave churn with hits on the hot layer
+        dispatch.node_max_hyperedge_size(layer)
+        assert dispatch.node_max_hyperedge_size(hot) is hot_table
+    # cap-1 fresh inserts plus the hot layer fill the cache exactly; the
+    # next insert evicts the LRU churn entry, never the just-hit layer
+    dispatch.node_max_hyperedge_size(tiny_layer(2000))
+    assert dispatch.node_max_hyperedge_size(hot) is hot_table
+    dispatch._NODE_WIDTH_CACHE.clear()

@@ -1,0 +1,590 @@
+"""Graph-query serving engine: micro-batching bit-identity, LRU cache
+semantics (hits bit-identical to cold misses, mutation invalidation),
+bounded-queue backpressure, error isolation, threaded clients, and the
+trace-file surface (api.serve + CLI serve)."""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.cli import Session
+from repro.serve import (
+    GraphServeEngine,
+    QueueFull,
+    REQUEST_KINDS,
+    assert_results_equal as _assert_same,
+    parse_trace,
+    run_request,
+)
+
+
+@pytest.fixture()
+def net():
+    n = 300
+    net = api.createnetwork(api.createnodeset(n))
+    net = api.generate(api.addlayer(net, "er", 1), "er",
+                       type="er", p=0.03, seed=1)
+    net = api.generate(api.addlayer(net, "wk", 2), "wk",
+                       type="2mode", h=30, a=4, seed=2)
+    rng = np.random.default_rng(0)
+    net = api.setnodeattr(
+        net, "grp", np.arange(n), rng.integers(0, 3, n).astype(np.int64)
+    )
+    return net
+
+
+def _mixed_trace(net, n_requests: int, seed: int = 0) -> list[dict]:
+    """Randomized request stream hitting every kind, ± filters."""
+    rng = np.random.default_rng(seed)
+    n = net.n_nodes
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    trace = []
+    for _ in range(n_requests):
+        kind = REQUEST_KINDS[rng.integers(0, len(REQUEST_KINDS))]
+        use_filter = bool(rng.integers(0, 2))
+        if kind == "getedge":
+            req = {"kind": kind, "layer": "wk",
+                   "u": int(rng.integers(0, n)), "v": int(rng.integers(0, n))}
+        elif kind == "alters":
+            req = {"kind": kind, "u": int(rng.integers(0, n)),
+                   "max_alters": 64}
+        elif kind == "degree":
+            req = {"kind": kind,
+                   "u": [int(i) for i in rng.integers(0, n, 3)]}
+        elif kind == "khop":
+            req = {"kind": kind, "sources": int(rng.integers(0, n)),
+                   "k": int(rng.integers(1, 3)), "max_frontier": 64}
+        else:
+            req = {"kind": kind, "starts": int(rng.integers(0, n)),
+                   "steps": 4, "walkers": 2, "seed": int(rng.integers(0, 3))}
+        if use_filter and kind != "walkbatch":
+            req["filter"] = flt
+        trace.append(req)
+    return trace
+
+
+# -- micro-batching bit-identity ---------------------------------------------
+
+
+def test_served_results_bit_identical_to_per_call_loop(net):
+    """Coalesced dispatch == one-call-at-a-time, across all five kinds,
+    with and without filters (the serve_perf benchmark's contract)."""
+    trace = _mixed_trace(net, 60)
+    engine = GraphServeEngine(net)
+    served = engine.serve(trace)
+    assert [r.rid for r in served] == list(range(60))
+    for req, res in zip(trace, served):
+        assert res.error is None, res.error
+        _assert_same(res.value, run_request(net, req))
+    # every kind actually went through a coalesced batch
+    assert all(engine.stats["batches"][k] >= 1 for k in REQUEST_KINDS)
+
+
+def test_getedge_group_coalesces_into_one_dispatch(net):
+    reqs = [{"kind": "getedge", "layer": "er", "u": i, "v": i + 1}
+            for i in range(20)]
+    engine = GraphServeEngine(net)
+    engine.serve(reqs)
+    assert engine.stats["batches"]["getedge"] == 1
+    assert engine.stats["dispatched"]["getedge"] == 20
+
+
+# -- result cache -------------------------------------------------------------
+
+
+def test_cache_hits_bit_identical_to_cold_misses_all_kinds(net):
+    trace = _mixed_trace(net, 40, seed=3)
+    engine = GraphServeEngine(net, cache_size=1024)
+    cold = engine.serve(trace)
+    hot = engine.serve(trace)
+    for c, h in zip(cold, hot):
+        assert h.cached
+        _assert_same(c.value, h.value)
+    stats = engine.stats["cache"]
+    assert stats["hits"] >= len(trace)
+
+
+def test_cache_lru_eviction_and_stats(net):
+    engine = GraphServeEngine(net, cache_size=4)
+    reqs = [{"kind": "degree", "u": i} for i in range(6)]
+    engine.serve(reqs)
+    s = engine.stats["cache"]
+    assert s["entries"] == 4 and s["evictions"] == 2
+    # 0 and 1 were evicted (oldest), 2..5 still hit
+    assert not engine.serve([{"kind": "degree", "u": 0}])[0].cached
+    assert engine.serve([{"kind": "degree", "u": 5}])[0].cached
+
+
+def test_cache_disabled_with_zero_capacity(net):
+    engine = GraphServeEngine(net, cache_size=0)
+    r1 = engine.serve([{"kind": "degree", "u": 1}])[0]
+    r2 = engine.serve([{"kind": "degree", "u": 1}])[0]
+    assert not r1.cached and not r2.cached
+    _assert_same(r1.value, r2.value)
+
+
+def test_duplicate_requests_in_one_round_share_one_dispatch(net):
+    engine = GraphServeEngine(net)
+    res = engine.serve([{"kind": "degree", "u": 7}] * 5)
+    assert engine.stats["dispatched"]["degree"] == 1
+    assert engine.stats["coalesced_dupes"] == 4
+    for r in res:
+        _assert_same(r.value, res[0].value)
+
+
+# -- mutation invalidation (never serve a stale result) -----------------------
+
+
+def test_setattr_invalidates_filtered_results(net):
+    """A served filtered query after set_attr must reflect the new
+    attribute values — the filter spec re-resolves AND the cache drops."""
+    engine = GraphServeEngine(net)
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    req = {"kind": "alters", "u": 5, "max_alters": 64, "filter": flt}
+    before = engine.serve([req])[0]
+    # flip every node into group 1: the filtered result must widen
+    engine.set_attr("grp", list(range(net.n_nodes)),
+                    [1] * net.n_nodes)
+    after = engine.serve([req])[0]
+    assert not after.cached
+    _assert_same(after.value, run_request(engine.net, req))
+    unfiltered = run_request(
+        engine.net, {"kind": "alters", "u": 5, "max_alters": 64}
+    )
+    np.testing.assert_array_equal(after.value, unfiltered)
+    assert before.value.size <= after.value.size
+
+
+def test_filter_spec_resolved_once_per_generation(net, monkeypatch):
+    """Repeated dict filter specs resolve (attribute select + mask hash)
+    once per mutation epoch, not once per request; a mutation forces a
+    fresh resolve so the memo never serves a pre-mutation mask."""
+    calls = {"n": 0}
+    cls = type(net.nodeset)
+    real_select = cls.select
+
+    def counting_select(self, *a, **kw):
+        calls["n"] += 1
+        return real_select(self, *a, **kw)
+
+    monkeypatch.setattr(cls, "select", counting_select)
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    reqs = [{"kind": "degree", "u": i, "filter": dict(flt)}
+            for i in range(20)]
+    engine = GraphServeEngine(net, cache_size=0)  # memo, not result cache
+    out_before = engine.serve(reqs)
+    assert calls["n"] == 1
+    engine.set_attr("grp", list(range(net.n_nodes)), [1] * net.n_nodes)
+    out_after = engine.serve(reqs)
+    assert calls["n"] == 2
+    monkeypatch.undo()
+    for req, res in zip(reqs, out_before):
+        _assert_same(res.value, run_request(net, req))
+    for req, res in zip(reqs, out_after):
+        _assert_same(res.value, run_request(engine.net, req))
+
+
+def test_deletelayer_invalidates_all_layer_results(net):
+    engine = GraphServeEngine(net)
+    req = {"kind": "degree", "u": 3}  # all layers
+    before = engine.serve([req])[0]
+    engine.delete_layer("wk")
+    after = engine.serve([req])[0]
+    assert not after.cached
+    _assert_same(after.value, run_request(engine.net, req))
+    assert "wk" not in engine.net.layer_names
+    assert before.error is None
+
+
+def test_importlayer_invalidates_same_key_results(net, tmp_path):
+    """import_layer swaps a layer's content under an unchanged cache key —
+    the canonical stale-cache hazard."""
+    f = tmp_path / "edges.tsv"
+    f.write_text("".join(f"{u}\t{u + 1}\n" for u in range(0, 50, 2)))
+    engine = GraphServeEngine(net)
+    req = {"kind": "getedge", "layer": "er", "u": 0, "v": 1}
+    engine.serve([req])  # cached against the generated er layer
+    engine.import_layer("er", str(f))
+    after = engine.serve([req])[0]
+    assert not after.cached
+    _assert_same(after.value, run_request(engine.net, req))
+    assert after.value == 1.0  # edge 0-1 exists in the imported layer
+
+
+def test_mutation_sweep_never_serves_stale(net, tmp_path):
+    """Property sweep: interleave random queries with random mutations;
+    every served result must equal a fresh per-call execution against the
+    engine's current network, for all five request kinds."""
+    rng = np.random.default_rng(11)
+    engine = GraphServeEngine(net)
+    f = tmp_path / "imp.tsv"
+    f.write_text("".join(f"{u}\t{u + 2}\n" for u in range(0, 40, 4)))
+    trace = _mixed_trace(net, 30, seed=7)
+    for i, req in enumerate(trace):
+        if i % 7 == 3:
+            mutation = rng.integers(0, 3)
+            if mutation == 0:
+                ids = rng.integers(0, engine.net.n_nodes, 10)
+                engine.set_attr("grp", [int(x) for x in ids],
+                                [int(rng.integers(0, 3))] * 10)
+            elif mutation == 1 and "extra" not in engine.net.layer_names:
+                engine.import_layer("extra", str(f))
+            elif "extra" in engine.net.layer_names:
+                engine.delete_layer("extra")
+        res = engine.serve([req])[0]
+        assert res.error is None, res.error
+        _assert_same(res.value, run_request(engine.net, req))
+
+
+def test_queued_filtered_request_recanonicalized_on_mutation(net):
+    """A filter spec resolved at submit time must NOT execute with a
+    pre-mutation mask: mutation re-resolves queued requests against the
+    new network before they dispatch."""
+    engine = GraphServeEngine(net)
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    req = {"kind": "alters", "u": 5, "max_alters": 64, "filter": flt}
+    rid = engine.submit(req)  # queued, not yet pumped
+    engine.set_attr("grp", list(range(net.n_nodes)), [1] * net.n_nodes)
+    engine.pump()
+    out = engine.result(rid)
+    assert out is not None and out.error is None
+    _assert_same(out.value, run_request(engine.net, req))
+
+
+def test_queued_request_for_deleted_layer_errors_when_dispatched(net):
+    engine = GraphServeEngine(net)
+    rid = engine.submit({"kind": "getedge", "layer": "wk", "u": 0, "v": 1})
+    engine.delete_layer("wk")
+    engine.pump()
+    out = engine.result(rid)
+    assert out is not None and out.error is not None
+    assert "wk" in out.error
+
+
+def test_mutation_during_dispatch_never_repopulates_cache(net, monkeypatch):
+    """An in-flight batch finishing after update_network delivers its
+    (pre-mutation) results but must not re-enter the invalidated cache."""
+    from repro.serve import graph_engine as ge
+
+    engine = GraphServeEngine(net)
+    real = ge._EXECUTORS["degree"]
+
+    def mutate_mid_dispatch(n, gk, creqs):
+        vals = real(n, gk, creqs)
+        engine.set_attr("grp", [0], [2])  # lands while batch is in flight
+        return vals
+
+    monkeypatch.setitem(ge._EXECUTORS, "degree", mutate_mid_dispatch)
+    engine.serve([{"kind": "degree", "u": 9}])
+    monkeypatch.undo()
+    assert engine.stats["cache"]["entries"] == 0
+    again = engine.serve([{"kind": "degree", "u": 9}])[0]
+    assert not again.cached  # recomputed against the current network
+    _assert_same(again.value, run_request(engine.net, {"kind": "degree",
+                                                       "u": 9}))
+
+
+def test_mutation_racing_submit_recanonicalizes(net, monkeypatch):
+    """A mutation landing between submit's filter resolution and the
+    enqueue must not slip a stale mask into the queue (submit detects
+    the generation change and re-resolves)."""
+    from repro.serve import graph_engine as ge
+
+    engine = GraphServeEngine(net)
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    req = {"kind": "alters", "u": 5, "max_alters": 64, "filter": flt}
+    real = ge.canonical_request
+    fired = []
+
+    def racing(n, r, **kw):
+        creq = real(n, r, **kw)
+        if not fired:
+            fired.append(True)  # mutate after resolution, before enqueue
+            engine.set_attr("grp", list(range(net.n_nodes)),
+                            [1] * net.n_nodes)
+        return creq
+
+    monkeypatch.setattr(ge, "canonical_request", racing)
+    rid = engine.submit(req)
+    monkeypatch.undo()
+    assert len(fired) == 1
+    engine.pump()
+    out = engine.result(rid)
+    assert out.error is None
+    _assert_same(out.value, run_request(engine.net, req))
+
+
+def test_serve_with_background_pump_running(net):
+    """serve() on a start()ed engine must wait for in-flight batches
+    (pending can read 0 while the pump thread holds a popped batch)."""
+    with GraphServeEngine(net).start() as engine:
+        for _ in range(5):
+            res = engine.serve(_mixed_trace(net, 8, seed=13))
+            assert len(res) == 8
+            assert all(r.error is None for r in res)
+
+
+def test_serve_isolates_malformed_trace_lines(net):
+    """One bad trace line becomes an error record; the rest still serve."""
+    trace = [
+        {"kind": "degree", "u": 1},
+        {"kind": "getedge", "layer": "no_such_layer", "u": 0, "v": 1},
+        {"kind": "teleport", "u": 2},
+        {"kind": "degree", "u": 2},
+    ]
+    res = GraphServeEngine(net).serve(trace)
+    assert [r.rid for r in res] == [0, 1, 2, 3]
+    assert res[0].error is None and res[3].error is None
+    assert "no_such_layer" in res[1].error
+    assert "teleport" in res[2].error
+    _assert_same(res[0].value, run_request(net, trace[0]))
+    # a non-dict entry is isolated too (AttributeError path)
+    res = GraphServeEngine(net).serve([{"kind": "degree", "u": 1}, ["oops"]])
+    assert res[0].error is None and res[1].error is not None
+
+
+def test_zero_queue_limit_clamped_no_livelock(net):
+    engine = GraphServeEngine(net, queue_limit=0)
+    res = engine.serve([{"kind": "degree", "u": 1},
+                        {"kind": "degree", "u": 2}])
+    assert all(r.error is None for r in res)
+
+
+# -- backpressure -------------------------------------------------------------
+
+
+def test_heavy_flood_cannot_starve_point_queries(net):
+    """khop floods saturate their own bounded queue (QueueFull) while
+    point queries still enqueue and get served first each round."""
+    engine = GraphServeEngine(
+        net, heavy_queue_limit=8, max_heavy_per_round=2
+    )
+    for i in range(8):
+        engine.submit({"kind": "khop", "sources": i, "k": 1})
+    with pytest.raises(QueueFull):
+        engine.submit({"kind": "khop", "sources": 99, "k": 1})
+    # the point lane is unaffected by the flood
+    rid = engine.submit({"kind": "degree", "u": 1})
+    served = engine.pump()
+    # one round serves the point query and only max_heavy_per_round khops
+    assert served == 3
+    assert engine.result(rid) is not None
+    assert engine.pending == 6
+
+
+def test_point_queue_backpressure(net):
+    engine = GraphServeEngine(net, queue_limit=2)
+    engine.submit({"kind": "degree", "u": 0})
+    engine.submit({"kind": "degree", "u": 1})
+    with pytest.raises(QueueFull):
+        engine.submit({"kind": "degree", "u": 2})
+    engine.pump()
+    engine.submit({"kind": "degree", "u": 2})  # drained -> accepted
+    assert engine.stats["rejected"] == 1
+
+
+# -- robustness ---------------------------------------------------------------
+
+
+def test_uncollected_results_bounded(net):
+    """Fire-and-forget clients (submit without result()) must not grow
+    the result store without bound: overflow drops oldest-stored results
+    and counts them, while recent results stay collectable."""
+    engine = GraphServeEngine(
+        net, cache_size=0, queue_limit=4, max_heavy_per_round=1,
+        result_limit=1,  # clamps to 2 * (queue_limit + heavy_limit) = 16
+    )
+    rids = []
+    for i in range(64):
+        while True:
+            try:
+                rids.append(engine.submit({"kind": "degree", "u": i % 300}))
+                break
+            except QueueFull:
+                engine.pump()
+    while engine.pending:
+        engine.pump()
+    s = engine.stats
+    assert s["uncollected"] <= 16
+    assert s["results_dropped"] == 64 - s["uncollected"]
+    assert engine.result(rids[0]) is None  # oldest: dropped
+    newest = engine.result(rids[-1])  # newest: still collectable
+    assert newest is not None
+    _assert_same(newest.value, run_request(net, {"kind": "degree",
+                                                 "u": 63 % 300}))
+
+
+def test_malformed_flood_cannot_drop_replay_results(net):
+    """Regression: a burst of malformed trace lines between valid
+    requests must not push the result store over its bound and trim the
+    replay's own uncollected results (error records bypass the store)."""
+    engine = GraphServeEngine(
+        net, cache_size=0, queue_limit=4, max_heavy_per_round=1,
+        result_limit=1,  # clamps to 16
+    )
+    trace = (
+        [{"kind": "degree", "u": i % 300} for i in range(16)]
+        + [{"kind": "bogus"}] * 20
+        + [{"kind": "degree", "u": (16 + i) % 300} for i in range(8)]
+    )
+    out = engine.serve(trace)
+    assert len(out) == 44
+    assert [r.rid for r in out] == list(range(44))
+    for i, r in enumerate(out):
+        if 16 <= i < 36:
+            assert r.error is not None and "bogus" in r.error
+        else:
+            assert r.error is None, (i, r.error)
+            _assert_same(r.value, run_request(net, trace[i]))
+    assert engine.stats["results_dropped"] == 0
+    assert not engine._claimed  # no leaked claims after the replay
+
+
+def test_concurrent_flood_cannot_drop_threaded_replay(net):
+    """A fire-and-forget client overflowing the shared result store must
+    drop only its own uncollected results, never the rids a concurrent
+    serve() replay has claimed (which would deadlock its drain)."""
+    engine = GraphServeEngine(
+        net, cache_size=0, queue_limit=4, max_heavy_per_round=1,
+        result_limit=1,  # clamps to 16
+    ).start()
+    with engine:
+        trace = [{"kind": "degree", "u": i % 300} for i in range(40)]
+
+        def flood():
+            for i in range(64):  # submit-and-forget, never collected
+                while True:
+                    try:
+                        engine.submit({"kind": "degree", "u": i % 300})
+                        break
+                    except QueueFull:
+                        time.sleep(0.002)
+
+        t = threading.Thread(target=flood)
+        t.start()
+        out = engine.serve(trace)
+        t.join()
+    assert len(out) == 40
+    for req, r in zip(trace, out):
+        assert r.error is None
+        _assert_same(r.value, run_request(net, req))
+    s = engine.stats
+    assert s["results_dropped"] > 0  # the flood's results were trimmed
+    assert s["uncollected"] <= 16
+    assert not engine._claimed
+
+
+def test_malformed_request_rejected_at_submit(net):
+    engine = GraphServeEngine(net)
+    with pytest.raises(ValueError):
+        engine.submit({"kind": "teleport", "u": 0})
+    with pytest.raises(KeyError):
+        engine.submit({"kind": "getedge", "layer": "nope", "u": 0, "v": 1})
+    with pytest.raises(ValueError):
+        engine.submit({"kind": "khop", "sources": 0, "k": -1})
+
+
+def test_runtime_error_isolated_per_request(net, monkeypatch):
+    """A dispatch blowing up marks its own requests failed; the rest of
+    the round still serves."""
+    from repro.serve import graph_engine as ge
+
+    def boom(*a, **k):
+        raise RuntimeError("kernel exploded")
+
+    monkeypatch.setitem(ge._EXECUTORS, "khop", boom)
+    engine = GraphServeEngine(net)
+    res = engine.serve([
+        {"kind": "degree", "u": 1},
+        {"kind": "khop", "sources": 1, "k": 1},
+    ])
+    assert res[0].error is None
+    assert res[1].error is not None and "kernel exploded" in res[1].error
+    # errors are not cached: a later fixed dispatch recomputes
+    monkeypatch.undo()
+    ok = engine.serve([{"kind": "khop", "sources": 1, "k": 1}])[0]
+    assert ok.error is None and not ok.cached
+
+
+def test_threaded_clients_background_pump(net):
+    """Many client threads submit concurrently against the background
+    pump; every result arrives and matches the per-call reference."""
+    with GraphServeEngine(net).start() as engine:
+        results = {}
+
+        def client(base):
+            for i in range(5):
+                req = {"kind": "degree", "u": (base + i) % net.n_nodes}
+                rid = engine.submit(req)
+                out = engine.result(rid, timeout=30.0)
+                results[(base, i)] = (req, out)
+
+        threads = [threading.Thread(target=client, args=(b,))
+                   for b in (0, 50, 100, 150)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == 20
+    for req, out in results.values():
+        assert out is not None and out.error is None
+        _assert_same(out.value, run_request(net, req))
+
+
+# -- trace files + api/CLI surface -------------------------------------------
+
+
+def test_parse_trace_comments_and_errors():
+    text = '# a comment\n\n{"kind": "degree", "u": 1}\n'
+    assert parse_trace(text) == [{"kind": "degree", "u": 1}]
+    with pytest.raises(ValueError, match="line 1"):
+        parse_trace("not json")
+    with pytest.raises(ValueError, match="expected an object"):
+        parse_trace("[1, 2]")
+
+
+def test_api_serve_trace_file(net, tmp_path):
+    trace = _mixed_trace(net, 12, seed=5)
+    path = tmp_path / "trace.jsonl"
+    path.write_text(
+        "# mixed trace\n" + "".join(json.dumps(r) + "\n" for r in trace)
+    )
+    records, stats = api.serve(net, str(path))
+    assert len(records) == 12
+    assert [r["id"] for r in records] == list(range(12))
+    for req, rec in zip(trace, records):
+        assert rec["kind"] == req["kind"]
+        assert "result" in rec
+    assert stats["served"] == 12
+
+
+def test_cli_serve_text_and_json(net, tmp_path, capsys):
+    trace_path = tmp_path / "t.jsonl"
+    trace_path.write_text(
+        '{"kind": "degree", "u": 1}\n{"kind": "degree", "u": 1}\n'
+        '{"kind": "getedge", "layer": "er", "u": 0, "v": 1}\n'
+    )
+    script = (
+        "nodes = createnodeset(createnodes = 120)\n"
+        "net = createnetwork(nodeset = nodes)\n"
+        'addlayer(net, "er", mode = 1)\n'
+        'generate(net, "er", type = er, p = 0.05, seed = 1)\n'
+        f'serve(net, file = "{trace_path}")\n'
+    )
+    out_text = Session(mode="text").run_script(script)
+    assert len(out_text) == 1 and "served 3 requests" in out_text[0]
+    out_json = Session(mode="json").run_script(script)
+    payload = json.loads(out_json[0])
+    assert payload["command"] == "serve"
+    result = payload["result"]
+    assert result["served"] == 3
+    assert len(result["results"]) == 3
+    assert result["results"][1]["cached"] is True
+    # the duplicate was served without recomputation: an LRU hit when it
+    # lands in a later round, a coalesced dupe when in the same round
+    stats = result["stats"]
+    assert stats["cache"]["hits"] + stats["coalesced_dupes"] >= 1

@@ -14,7 +14,7 @@ from repro.data.pipeline import (
     synthetic_batch_at,
 )
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.models.lm_serve import Request, ServeEngine
 from repro.train.checkpoint import (
     latest_checkpoint,
     restore_checkpoint,

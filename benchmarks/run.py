@@ -34,6 +34,7 @@ RESULTS: dict[str, float] = {}  # bench_name -> us_per_call (BENCH_1.json)
 RESULTS_FILTERED: dict[str, float] = {}  # filtered workload (BENCH_2.json)
 RESULTS_TRAVERSAL: dict[str, float] = {}  # traversal workload (BENCH_4.json)
 RESULTS_SERVE: dict[str, float] = {}  # serving workload (BENCH_5.json)
+RESULTS_SERVE_MUT: dict[str, float] = {}  # mutating serve workload (BENCH_6.json)
 
 
 def emit(
@@ -582,6 +583,126 @@ def serve_perf(net) -> None:
         )
 
 
+def serve_perf_mutating(net) -> None:
+    """Serving under interleaved mutations: scoped vs global invalidation
+    (BENCH_6.json).
+
+    Replays the same mixed trace as :func:`serve_perf`, but interleaves a
+    mutation every ``n_requests / n_mutations`` requests — edge inserts
+    into the unqueried ``Random`` layer alternating with ``aux``-attribute
+    rewrites, the background churn a resident engine actually sees. Two
+    engines serve the identical request/mutation schedule: one with
+    per-layer scoped invalidation (the default) and one with the legacy
+    drop-everything cache flush. Asserts every served result is
+    bit-identical between the two, then records per-request latency and
+    cache hit/miss counts for both; ``compare.py`` gates the
+    misses_global/misses_scoped ratio so a PR that quietly reverts scoped
+    eviction to a full flush cannot merge green.
+    """
+    from repro.core.api import setnodeattr
+    from repro.serve import GraphServeEngine, assert_results_equal
+
+    rng = np.random.default_rng(23)
+    n = net.n_nodes
+    net = setnodeattr(
+        net, "grp", np.arange(n), rng.integers(0, 3, n).astype(np.int64),
+    )
+    net = setnodeattr(
+        net, "aux", np.arange(n), rng.integers(0, 100, n).astype(np.int64),
+    )
+    n_requests = _b(10_000, 200)
+    trace = build_serve_trace(net, n_requests)
+    n_mut = _b(64, 8)
+    chunk = max(1, n_requests // n_mut)
+
+    # One fixed mutation schedule, applied identically under both modes.
+    # Random-layer inserts evict only entries scoped to Random (degree
+    # rows span all layers, so they churn honestly); aux rewrites touch
+    # no query in the trace at all.
+    mut_rng = np.random.default_rng(41)
+    mutations = []
+    for i in range(n_mut):
+        if i % 2 == 0:
+            mutations.append((
+                "add_edges", "Random",
+                mut_rng.integers(0, n, 4), mut_rng.integers(0, n, 4),
+            ))
+        else:
+            mutations.append((
+                "set_attr", "aux",
+                mut_rng.integers(0, n, 4), mut_rng.integers(0, 100, 4),
+            ))
+
+    def replay(scoped: bool):
+        engine = GraphServeEngine(
+            net, cache_size=4096, scoped_invalidation=scoped,
+        )
+        out = []
+        # Serving time only: mutation application (the CSR rebuild) is
+        # identical under both modes and would drown the cache delta.
+        us = us_mut = 0.0
+        for mi, start in enumerate(range(0, n_requests, chunk)):
+            t0 = time.perf_counter()
+            out.extend(engine.serve(trace[start:start + chunk]))
+            us += (time.perf_counter() - t0) * 1e6
+            if mi < len(mutations):
+                kind, name, a, b = mutations[mi]
+                t0 = time.perf_counter()
+                if kind == "add_edges":
+                    engine.add_edges(name, a, b)
+                else:
+                    engine.set_attr(name, a, b)
+                us_mut += (time.perf_counter() - t0) * 1e6
+        return out, us, us_mut, engine.stats
+
+    # Warm jit caches for the chunked round shapes under BOTH miss
+    # patterns — a cache miss changes batch composition, so the two modes
+    # compile different bucket shapes.
+    replay(scoped=True)
+    replay(scoped=False)
+    out_scoped, us_scoped, mut_scoped, st_scoped = replay(scoped=True)
+    out_global, us_global, mut_global, st_global = replay(scoped=False)
+
+    # bit-identity: scoped eviction must never serve a result the
+    # nuke-everything engine would not have produced.
+    assert len(out_scoped) == len(out_global) == n_requests
+    for r_s, r_g in zip(out_scoped, out_global):
+        assert r_s.error is None, r_s.error
+        assert r_g.error is None, r_g.error
+        assert_results_equal(r_s.value, r_g.value)
+
+    def _rates(stats):
+        c = stats["cache"]
+        hit = (c["hits"] + stats["coalesced_dupes"]) / n_requests
+        return hit, c["hits"], c["misses"]
+
+    hr_scoped, hits_s, miss_s = _rates(st_scoped)
+    hr_global, hits_g, miss_g = _rates(st_global)
+    assert hr_scoped >= hr_global, (
+        f"scoped hit rate {hr_scoped:.2f} below global {hr_global:.2f}"
+    )
+    assert miss_s <= miss_g, (miss_s, miss_g)
+
+    emit("serve_mut/global_invalidation", us_global / n_requests,
+         f"requests={n_requests};mutations={n_mut}"
+         f";hit_rate={hr_global:.2f};hits={hits_g};misses={miss_g}"
+         f";mut_ms={mut_global / 1e3:.0f}",
+         results=RESULTS_SERVE_MUT)
+    emit("serve_mut/scoped_invalidation", us_scoped / n_requests,
+         f"requests={n_requests};mutations={n_mut}"
+         f";hit_rate={hr_scoped:.2f};hits={hits_s};misses={miss_s}"
+         f";mut_ms={mut_scoped / 1e3:.0f}"
+         f";speedup={us_global / us_scoped:.2f}x;bit_identical=1",
+         results=RESULTS_SERVE_MUT)
+    # counts, not µs — compare.py gates the global/scoped ratio (> 1 while
+    # scoped invalidation preserves unrelated entries; collapses to ~1 if
+    # eviction reverts to a full flush).
+    emit("serve_mut/cache_misses_global", float(miss_g), "count",
+         results=RESULTS_SERVE_MUT)
+    emit("serve_mut/cache_misses_scoped", float(miss_s), "count",
+         results=RESULTS_SERVE_MUT)
+
+
 def shortest_path(net) -> None:
     from repro.core import shortest_path_length
 
@@ -682,6 +803,7 @@ def main() -> None:
     query_perf_filtered()
     traversal_perf()
     serve_perf(net)
+    serve_perf_mutating(net)
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
@@ -694,6 +816,7 @@ def main() -> None:
     print(f"# wrote {write_bench_json(RESULTS_FILTERED, Path(__file__).parent / 'BENCH_2.json')}")
     print(f"# wrote {write_bench_json(RESULTS_TRAVERSAL, Path(__file__).parent / 'BENCH_4.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SERVE, Path(__file__).parent / 'BENCH_5.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_SERVE_MUT, Path(__file__).parent / 'BENCH_6.json')}")
 
 
 if __name__ == "__main__":

@@ -59,7 +59,22 @@ from .traversal import (
 )
 from .walks import ego_sample, neighborhood_sample, random_walk
 from .memory import memory_report
-from .io import load_network, save_network
+from .io import TruncatedFileError, load_network, save_network
+from .layers import add_edges, delete_edges
+from .wal import (
+    WALCorruptHeaderError,
+    WALReplayError,
+    WALWriteError,
+    WriteAheadLog,
+    apply_op,
+)
+from .snapshot import (
+    DurableStore,
+    RecoveryInfo,
+    SnapshotMissingError,
+    recover,
+    write_snapshot,
+)
 
 __all__ = [
     "CSR", "SENTINEL", "csr_from_coo", "csr_transpose",
@@ -82,4 +97,10 @@ __all__ = [
     "ego_sample", "neighborhood_sample", "random_walk",
     "memory_report",
     "load_network", "save_network",
+    "TruncatedFileError",
+    "add_edges", "delete_edges",
+    "WALCorruptHeaderError", "WALReplayError", "WALWriteError",
+    "WriteAheadLog", "apply_op",
+    "DurableStore", "RecoveryInfo", "SnapshotMissingError",
+    "recover", "write_snapshot",
 ]

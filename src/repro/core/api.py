@@ -59,6 +59,9 @@ __all__ = [
     # container surface
     "listlayers", "deletelayer", "describenet",
     "exportlayer", "importlayer", "subnetwork", "samplenodes",
+    # durability (PR 6): batched edge mutation + store save/recover/log
+    "addedges", "deleteedges",
+    "savestore", "recovernet", "wallog",
 ]
 
 
@@ -458,6 +461,73 @@ def importlayer(
         n_hyperedges=n_hyperedges, default_value=default_value,
     )
     return net.with_layer(name, layer)
+
+
+def addedges(net: Network, layer: str, src, dst, values=None) -> Network:
+    """CLI ``addedges``: batched edge/membership insert (upsert on dupes)."""
+    from .layers import add_edges
+
+    return net.with_layer(layer, add_edges(net.layer(layer), src, dst,
+                                           values=values))
+
+
+def deleteedges(net: Network, layer: str, src, dst) -> Network:
+    """CLI ``deleteedges``: batched edge/membership delete (missing pairs
+    are ignored)."""
+    from .layers import delete_edges
+
+    return net.with_layer(layer, delete_edges(net.layer(layer), src, dst))
+
+
+def savestore(net: Network, dir: str) -> dict:
+    """CLI ``savestore``: seed a durable store directory (snapshot + WAL)
+    from ``net``. Subsequent mutations go through snapshot.DurableStore
+    (or ``serve(..., store_dir=...)``)."""
+    from .snapshot import DurableStore
+
+    store = DurableStore.create(dir, net)
+    store.close()
+    return {"dir": str(dir), "last_lsn": store.last_lsn}
+
+
+def recovernet(dir: str) -> tuple[Network, dict]:
+    """CLI ``recovernet``: rebuild a network from a durable store directory
+    (latest intact snapshot + WAL tail replay) -> (net, recovery info)."""
+    from .snapshot import recover
+
+    net, info = recover(dir)
+    return net, {
+        "snapshot_lsn": info.snapshot_lsn, "replayed": info.replayed,
+        "last_lsn": info.last_lsn,
+        "snapshots_skipped": info.snapshots_skipped,
+        "torn_bytes": info.torn_bytes,
+    }
+
+
+def wallog(dir: str, after: int = -1) -> list[dict]:
+    """CLI ``wallog``: summarize the durable store's WAL records (lsn, op,
+    and the op's key fields — payload arrays reported as counts)."""
+    from pathlib import Path
+
+    from .snapshot import WAL_NAME
+    from .wal import scan
+
+    records, _, torn = scan(Path(dir) / WAL_NAME)
+    out = []
+    for r in records:
+        if r.lsn <= after:
+            continue
+        entry = {"lsn": r.lsn, "op": r.op.get("op")}
+        for key in ("name", "layer", "kind", "mode", "directed"):
+            if r.op.get(key) is not None:
+                entry[key] = r.op[key]
+        for key in ("nodes", "src", "dst", "values"):
+            if isinstance(r.op.get(key), list):
+                entry[f"n_{key}"] = len(r.op[key])
+        out.append(entry)
+    if torn:
+        out.append({"lsn": None, "op": "!torn-tail"})
+    return out
 
 
 def subnetwork(net: Network, selection) -> Network:

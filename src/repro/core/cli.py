@@ -426,6 +426,29 @@ class Session:
 
     # -- container surface ----------------------------------------------------
 
+    def _cmd_addedges(self, net, layer, src, dst, *, values=None):
+        new = api.addedges(net, str(layer), _ids(src), _ids(dst),
+                           values=values)
+        self._rebind(net, new)
+        return None, new
+
+    def _cmd_deleteedges(self, net, layer, src, dst):
+        new = api.deleteedges(net, str(layer), _ids(src), _ids(dst))
+        self._rebind(net, new)
+        return None, new
+
+    # -- durable store (WAL + snapshots, core/snapshot.py) --------------------
+
+    def _cmd_savestore(self, net, *, dir):
+        return api.savestore(net, str(dir)), None
+
+    def _cmd_recovernet(self, *, dir):
+        net, info = api.recovernet(str(dir))
+        return info, net
+
+    def _cmd_wallog(self, *, dir, after=-1):
+        return api.wallog(str(dir), after=int(after)), None
+
     def _cmd_listlayers(self, net):
         return api.listlayers(net), None
 

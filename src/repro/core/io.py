@@ -21,12 +21,28 @@ from .network import Network, create_network
 from .nodeset import AttrColumn, Nodeset
 
 __all__ = [
+    "TruncatedFileError",
     "save_network",
     "load_network",
     "export_layer_tsv",
     "import_layer_tsv",
     "load_attrs_tsv",
 ]
+
+
+class TruncatedFileError(ValueError):
+    """A text import hit a file cut off mid-record.
+
+    Importing a partial network silently is worse than failing: the
+    caller sees a plausible layer/attribute set with a bite taken out
+    of it. Raised with the 1-based line number of the torn record (or
+    the line reached when a gzip stream ended early).
+    """
+
+    def __init__(self, path, lineno: int, detail: str):
+        super().__init__(f"{path}:{lineno}: truncated file — {detail}")
+        self.path = str(path)
+        self.lineno = lineno
 
 
 def _pack_csr(arrays: dict, prefix: str, csr: CSR) -> dict:
@@ -133,6 +149,23 @@ def _open_text(path: Path, mode: str):
     return open(path, mode)
 
 
+def _iter_lines(f, path: Path):
+    """Yield lines, converting a mid-stream gzip EOF into TruncatedFileError."""
+    lineno = 0
+    it = iter(f)
+    while True:
+        try:
+            line = next(it)
+        except StopIteration:
+            return
+        except EOFError:
+            raise TruncatedFileError(
+                path, lineno + 1, "compressed stream ended mid-record"
+            ) from None
+        lineno += 1
+        yield line
+
+
 def export_layer_tsv(net: Network, layer_name: str, path: str | Path) -> None:
     """One-mode: ``src\\tdst[\\tvalue]`` rows; two-mode: ``node\\thyperedge``."""
     layer = net.layer(layer_name)
@@ -178,12 +211,24 @@ def import_layer_tsv(
     path = Path(path)
     src, dst, vals = [], [], []
     with _open_text(path, "r") as f:
-        for lineno, line in enumerate(f, 1):
+        for lineno, line in enumerate(_iter_lines(f, path), 1):
             parts = line.rstrip("\n").split("\t")
+            if not line.strip():
+                continue  # blank/trailing lines are fine
             if len(parts) < 2:
-                continue
-            src.append(int(parts[0]))
-            dst.append(int(parts[1]))
+                # a non-blank single-field row is a record cut mid-write
+                # (previously skipped silently -> partial network)
+                raise TruncatedFileError(
+                    path, lineno,
+                    f"edge row {parts[0]!r} has no destination column",
+                )
+            try:
+                src.append(int(parts[0]))
+                dst.append(int(parts[1]))
+            except ValueError:
+                raise ValueError(
+                    f"{path}:{lineno}: cannot parse edge row {line!r}"
+                ) from None
             if valued:
                 if len(parts) > 2 and parts[2] != "":
                     vals.append(float(parts[2]))
@@ -254,10 +299,12 @@ def load_attrs_tsv(
     """
     path = Path(path)
     with _open_text(path, "r") as f:
-        lines = [l.rstrip("\n") for l in f]
-    lines = [l for l in lines if l.strip()]
-    if not lines:
+        numbered = [(i, l.rstrip("\n"))
+                    for i, l in enumerate(_iter_lines(f, path), 1)]
+    numbered = [(i, l) for i, l in numbered if l.strip()]
+    if not numbered:
         return []
+    lines = [l for _, l in numbered]
     head = lines[0].split("\t")
     if head[0].lstrip("#").strip().lower() == "node" and len(head) > 1:
         cols = []
@@ -272,9 +319,15 @@ def load_attrs_tsv(
                     f"{path}: unknown attribute kind {ckind!r} in header"
                 )
             cols.append((cname, ckind, [], []))
-        for lineno, line in enumerate(lines[1:], 2):
+        for lineno, line in numbered[1:]:
             parts = line.split("\t")
-            node = int(parts[0])
+            try:
+                node = int(parts[0])
+            except ValueError:
+                raise TruncatedFileError(
+                    path, lineno,
+                    f"row starts with non-id field {parts[0]!r}",
+                ) from None
             for ci, (cname, ckind, ids, vals) in enumerate(cols):
                 cell = parts[ci + 1].strip() if ci + 1 < len(parts) else ""
                 if cell == "":
@@ -297,11 +350,18 @@ def load_attrs_tsv(
     if kind not in _ATTR_PARSERS:
         raise ValueError(f"unknown attribute kind {kind!r}")
     ids, vals = [], []
-    for lineno, line in enumerate(lines, 1):
+    for lineno, line in numbered:
         parts = line.split("\t")
         if len(parts) < 2 or parts[1].strip() == "":
-            raise ValueError(f"{path}:{lineno}: expected node<TAB>value")
-        ids.append(int(parts[0]))
+            raise TruncatedFileError(
+                path, lineno, "expected node<TAB>value"
+            )
+        try:
+            ids.append(int(parts[0]))
+        except ValueError:
+            raise ValueError(
+                f"{path}:{lineno}: node id {parts[0]!r} is not an integer"
+            ) from None
         try:
             vals.append(_ATTR_PARSERS[kind](parts[1].strip()))
         except ValueError:

@@ -43,6 +43,8 @@ from .csr import (
 __all__ = [
     "LayerOneMode",
     "LayerTwoMode",
+    "add_edges",
+    "delete_edges",
     "one_mode_from_edges",
     "two_mode_from_memberships",
 ]
@@ -416,6 +418,121 @@ def two_mode_from_memberships(
         members=members,
         max_memberships=max(memb.max_degree(), 1),
         max_hyperedge_size=max(members.max_degree(), 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched edge insert / delete (the WAL's incremental mutation ops)
+# ---------------------------------------------------------------------------
+
+
+def _csr_coo(csr: CSR) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Expand a CSR back to host COO (rows, cols, values|None)."""
+    indptr = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    cols = np.asarray(csr.indices).astype(np.int64)
+    vals = None if csr.values is None else np.asarray(csr.values)
+    return rows, cols, vals
+
+
+def _one_mode_logical_edges(
+    layer: LayerOneMode,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """The layer's logical edge list (undirected edges listed once)."""
+    rows, cols, vals = _csr_coo(layer.out)
+    if not layer.directed:
+        keep = rows <= cols  # each undirected edge stored in both rows
+        rows, cols = rows[keep], cols[keep]
+        vals = None if vals is None else vals[keep]
+    return rows, cols, vals
+
+
+def add_edges(layer, src, dst, values=None):
+    """Batched edge insert -> new layer (functional; host-side rebuild).
+
+    One-mode layers take (src, dst[, values]) edge triples — an edge that
+    already exists keeps the NEW value (upsert). Two-mode layers take
+    (node, hyperedge) membership pairs; the hyperedge space grows if a
+    new id exceeds it. Rebuilding CSR is O(nnz + batch): incremental
+    batches amortize exactly like the C# engine's hash-set inserts, and
+    the result is bit-identical to constructing from scratch.
+    """
+    src = np.atleast_1d(np.asarray(src, dtype=np.int64))
+    dst = np.atleast_1d(np.asarray(dst, dtype=np.int64))
+    if src.shape != dst.shape:
+        raise ValueError("src/dst length mismatch")
+    if isinstance(layer, LayerTwoMode):
+        if values is not None:
+            raise ValueError("two-mode memberships carry no edge values")
+        rows, cols, _ = _csr_coo(layer.memb)
+        n_hyper = max(
+            layer.n_hyperedges, int(dst.max()) + 1 if dst.size else 0
+        )
+        return two_mode_from_memberships(
+            layer.n_nodes,
+            n_hyper,
+            np.concatenate([src, rows]),
+            np.concatenate([dst, cols]),
+        )
+    osrc, odst, ovals = _one_mode_logical_edges(layer)
+    if layer.valued:
+        new_vals = (
+            np.ones(src.shape, np.float32) if values is None
+            else np.broadcast_to(
+                np.asarray(values, dtype=np.float32), src.shape
+            )
+        )
+        vals = np.concatenate([new_vals, ovals])
+    else:
+        if values is not None:
+            raise ValueError(
+                "layer is unvalued; re-import it valued to carry values"
+            )
+        vals = None
+    # new edges FIRST: csr_from_coo's stable dedup keeps the first
+    # occurrence per (u, v), so an upsert takes the new value
+    return one_mode_from_edges(
+        layer.n_nodes,
+        np.concatenate([src, osrc]),
+        np.concatenate([dst, odst]),
+        values=vals,
+        directed=layer.directed,
+        allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )
+
+
+def delete_edges(layer, src, dst):
+    """Batched edge delete -> new layer (missing pairs are ignored).
+
+    One-mode undirected layers treat (u, v) and (v, u) as the same edge;
+    two-mode layers delete (node, hyperedge) membership pairs.
+    """
+    src = np.atleast_1d(np.asarray(src, dtype=np.int64))
+    dst = np.atleast_1d(np.asarray(dst, dtype=np.int64))
+    if src.shape != dst.shape:
+        raise ValueError("src/dst length mismatch")
+    if isinstance(layer, LayerTwoMode):
+        rows, cols, _ = _csr_coo(layer.memb)
+        n = np.int64(layer.n_hyperedges)
+        drop = np.isin(rows * n + cols, src * n + dst)
+        return two_mode_from_memberships(
+            layer.n_nodes, layer.n_hyperedges, rows[~drop], cols[~drop]
+        )
+    osrc, odst, ovals = _one_mode_logical_edges(layer)
+    n = np.int64(layer.n_nodes)
+    gone = src * n + dst
+    if not layer.directed:
+        gone = np.concatenate([gone, dst * n + src])
+    drop = np.isin(osrc * n + odst, gone)
+    return one_mode_from_edges(
+        layer.n_nodes,
+        osrc[~drop],
+        odst[~drop],
+        values=None if ovals is None else ovals[~drop],
+        directed=layer.directed,
+        allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
     )
 
 

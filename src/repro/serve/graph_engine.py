@@ -16,9 +16,30 @@ and the batched traversal engine (core/traversal.py):
   benchmark asserts over a mixed 10k-request trace.
 * **Result cache** — an LRU keyed on ``(kind, layer selection,
   canonicalized args, filter fingerprint)`` with hit/miss/eviction stats.
-  Any mutating op (``set_attr``, ``delete_layer``, ``import_layer``,
-  ``update_network``) invalidates the whole cache: a served query never
-  returns a result computed against a previous network.
+  Mutations invalidate by SCOPE: every entry carries the set of layers
+  its result was computed from (``layer:<name>``, or ``layers*`` for
+  whole-network queries), and a mutation to layer L evicts only the
+  entries touching L (``delete_layer``/``import_layer``/``add_edges``/
+  ``delete_edges``; ``update_network`` still drops everything).
+  ``set_attr`` evicts nothing: cache keys embed a content hash of the
+  resolved filter mask, so entries computed under a pre-mutation mask
+  become unreachable (and LRU-age out) rather than stale — a hit under
+  the same mask content is bit-identical to a recompute. Constructing
+  the engine with ``scoped_invalidation=False`` restores the old
+  nuke-everything behaviour (the reference the property tests compare
+  against). A served query never returns a result computed against a
+  network that could disagree with the current one.
+* **Durability** (``store=``) — mutations route through a
+  ``core.snapshot.DurableStore``: the op is appended to a write-ahead
+  log and fsync'd *before* the engine's network rebinds, and a WAL
+  write failure rejects the mutation (fail closed) leaving the served
+  network unchanged. Crash recovery = latest snapshot + WAL tail.
+* **Graceful degradation** — per-request deadlines (``"timeout"``
+  seconds per request, or ``default_timeout=``) expire queued requests
+  into error results instead of serving arbitrarily stale answers; a
+  fault anywhere in a pump round (not just inside an executor) turns
+  into per-request error results and the background pump thread
+  survives to serve the next round.
 * **Backpressure** — two bounded queues split request kinds by cost:
   point queries (``getedge``, ``alters``, ``degree``) and heavy traversal
   (``khop``, ``walkbatch``). Each pump round drains the point queue first
@@ -51,6 +72,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import threading
+import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Iterable
@@ -215,6 +237,18 @@ def _resolve_filter(net, spec, memo: dict | None = None, gen: int = 0):
     return mask, fp
 
 
+#: scope token for results that read every layer (layers=None requests);
+#: any layer mutation invalidates these
+ALL_LAYERS_SCOPE = "layers*"
+
+
+def _layer_scopes(layers: tuple[str, ...] | None) -> frozenset[str]:
+    """Cache-dependency tokens for a request's layer selection."""
+    if layers is None:
+        return frozenset((ALL_LAYERS_SCOPE,))
+    return frozenset(f"layer:{n}" for n in layers)
+
+
 @dataclass(frozen=True)
 class _CanonRequest:
     """A request after canonicalization: hashable keys + dispatch args."""
@@ -225,6 +259,10 @@ class _CanonRequest:
     ids: tuple[int, ...]    # the batchable id payload (u / sources / ...)
     ids2: tuple[int, ...]   # second id payload (getedge v), else ()
     mask: np.ndarray | None = field(compare=False, hash=False, default=None)
+    # layers this request's result is computed from (scoped invalidation);
+    # derived from group_key so it is excluded from equality/hash
+    scopes: frozenset = field(compare=False, hash=False,
+                              default=frozenset((ALL_LAYERS_SCOPE,)))
 
 
 def canonical_request(
@@ -250,7 +288,8 @@ def canonical_request(
         net.layer(layer)
         u, v = (int(req["u"]),), (int(req["v"]),)
         gk = (kind, layer, fp)
-        return _CanonRequest(kind, gk, gk + (u, v), u, v, mask)
+        return _CanonRequest(kind, gk, gk + (u, v), u, v, mask,
+                             scopes=frozenset((f"layer:{layer}",)))
 
     if kind == "alters":
         layers = _canon_layers(net, req.get("layers"))
@@ -259,13 +298,15 @@ def canonical_request(
             raise ValueError(f"max_alters must be >= 1, got {m}")
         u = (int(req["u"]),)
         gk = (kind, layers, m, fp)
-        return _CanonRequest(kind, gk, gk + (u,), u, (), mask)
+        return _CanonRequest(kind, gk, gk + (u,), u, (), mask,
+                             scopes=_layer_scopes(layers))
 
     if kind == "degree":
         layers = _canon_layers(net, req.get("layers"))
         u = _canon_ids(req["u"], what="u")
         gk = (kind, layers, fp)
-        return _CanonRequest(kind, gk, gk + (u,), u, (), mask)
+        return _CanonRequest(kind, gk, gk + (u,), u, (), mask,
+                             scopes=_layer_scopes(layers))
 
     if kind == "khop":
         layers = _canon_layers(net, req.get("layers"))
@@ -276,7 +317,8 @@ def canonical_request(
         mf = None if mf is None else int(mf)
         src = _canon_ids(req["sources"], what="sources")
         gk = (kind, layers, k, mf, fp)
-        return _CanonRequest(kind, gk, gk + (src,), src, (), mask)
+        return _CanonRequest(kind, gk, gk + (src,), src, (), mask,
+                             scopes=_layer_scopes(layers))
 
     # walkbatch — RNG state couples rows across a batch, so each distinct
     # request is its own dispatch group (identical requests still dedup
@@ -294,7 +336,8 @@ def canonical_request(
     )
     starts = _canon_ids(req["starts"], what="starts")
     gk = (kind, layers, steps, walkers, seed, weights, fp, starts)
-    return _CanonRequest(kind, gk, gk, starts, (), mask)
+    return _CanonRequest(kind, gk, gk, starts, (), mask,
+                         scopes=_layer_scopes(layers))
 
 
 # ---------------------------------------------------------------------------
@@ -433,15 +476,23 @@ def assert_results_equal(a, b) -> None:
 
 
 class _ResultCache:
-    """LRU over canonical results with hit/miss/eviction/invalidation stats."""
+    """LRU over canonical results with hit/miss/eviction/invalidation stats.
+
+    Entries carry the scope-token set of the layers their result was
+    computed from; ``invalidate(scopes=...)`` evicts only intersecting
+    entries (a mutation to layer L leaves every entry not touching L
+    live), while ``invalidate()`` keeps the old drop-everything path.
+    """
 
     def __init__(self, capacity: int):
         self.capacity = max(int(capacity), 0)
-        self._d: OrderedDict = OrderedDict()
+        self._d: OrderedDict = OrderedDict()  # key -> (value, scopes)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.scoped_invalidations = 0
+        self.entries_invalidated = 0
 
     def get(self, key):
         if self.capacity == 0:
@@ -453,20 +504,28 @@ class _ResultCache:
             return None
         self._d.move_to_end(key)
         self.hits += 1
-        return hit
+        return hit[0]
 
-    def put(self, key, value) -> None:
+    def put(self, key, value, scopes: frozenset = frozenset()) -> None:
         if self.capacity == 0:
             return
-        self._d[key] = value
+        self._d[key] = (value, scopes)
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.evictions += 1
 
-    def invalidate(self) -> None:
-        self._d.clear()
-        self.invalidations += 1
+    def invalidate(self, scopes: frozenset | None = None) -> None:
+        if scopes is None:
+            self.entries_invalidated += len(self._d)
+            self._d.clear()
+            self.invalidations += 1
+            return
+        victims = [k for k, (_, deps) in self._d.items() if deps & scopes]
+        for k in victims:
+            del self._d[k]
+        self.entries_invalidated += len(victims)
+        self.scoped_invalidations += 1
 
     def __len__(self) -> int:
         return len(self._d)
@@ -479,6 +538,8 @@ class _ResultCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "scoped_invalidations": self.scoped_invalidations,
+            "entries_invalidated": self.entries_invalidated,
         }
 
 
@@ -493,6 +554,7 @@ class _Pending:
     creq: _CanonRequest
     raw: dict  # original request — re-canonicalized if the net mutates
     gen: int = 0  # engine generation the canonicalization ran against
+    deadline: float | None = None  # time.monotonic() expiry, None = never
 
 
 class GraphServeEngine:
@@ -506,15 +568,31 @@ class GraphServeEngine:
 
     def __init__(
         self,
-        net,
+        net=None,
         *,
         cache_size: int = 4096,
         queue_limit: int = 8192,
         heavy_queue_limit: int | None = None,
         max_heavy_per_round: int = 1024,
         result_limit: int = 65536,
+        scoped_invalidation: bool = True,
+        default_timeout: float | None = None,
+        store=None,
     ):
+        if net is None:
+            if store is None:
+                raise ValueError("need a network (net=) or a durable "
+                                 "store to serve from (store=)")
+            net = store.net
         self.net = net
+        # mutations go WAL-first through the DurableStore when present:
+        # a mutation the store could not make durable is rejected before
+        # the served network rebinds (fail closed)
+        self._store = store
+        # False = every mutation drops the whole cache + filter memo (the
+        # pre-PR-6 reference behaviour the scoped path is proven against)
+        self.scoped_invalidation = bool(scoped_invalidation)
+        self.default_timeout = default_timeout
         self._cache = _ResultCache(cache_size)
         self._queue_limit = max(int(queue_limit), 1)
         self._heavy_limit = max(int(
@@ -546,6 +624,8 @@ class GraphServeEngine:
         self._dispatched: dict[str, int] = {k: 0 for k in REQUEST_KINDS}
         self._rejected = 0
         self._coalesced_dupes = 0
+        self._deadline_expired = 0
+        self._pump_faults = 0
         self._filter_memo: dict = {}
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -566,7 +646,19 @@ class GraphServeEngine:
         malformed requests. ``rejected`` in :attr:`stats` counts the
         rejections the client saw; ``serve``'s internal retry loop opts
         out (``_count_rejection=False``) since it absorbs the raise.
+
+        A per-request ``"timeout"`` (seconds, overriding the engine's
+        ``default_timeout``) sets a deadline: a request still queued when
+        it expires is answered with a ``DeadlineExceeded`` error result
+        at the next pump round instead of a stale-by-seconds answer.
         """
+        timeout = request.get("timeout", self.default_timeout)
+        deadline = None
+        if timeout is not None:
+            timeout = float(timeout)
+            if timeout <= 0:
+                raise ValueError(f"timeout must be > 0, got {timeout}")
+            deadline = time.monotonic() + timeout
         with self._lock:
             gen, net = self._generation, self.net
         # canonicalization (filter resolution can touch the attribute
@@ -594,7 +686,7 @@ class GraphServeEngine:
             self._next_rid += 1
             if _claim:
                 self._claimed.add(rid)
-            q.append(_Pending(rid, creq, dict(request), gen))
+            q.append(_Pending(rid, creq, dict(request), gen, deadline))
             self._work.notify()
         return rid
 
@@ -620,22 +712,90 @@ class GraphServeEngine:
     def pump(self) -> int:
         """One scheduling round: drain the point queue and up to
         ``max_heavy_per_round`` heavy requests, coalesce, dispatch,
-        scatter. Returns the number of requests served."""
+        scatter. Returns the number of requests served.
+
+        The round is guarded end to end: an exception anywhere in it
+        (not just inside a group executor) becomes a ``pump fault``
+        error result for every popped-but-unanswered request, so a
+        fault can neither hang queued clients nor kill the background
+        pump thread (``pump_faults`` in :attr:`stats` counts rounds
+        that degraded this way).
+        """
         with self._lock:
-            batch = list(self._point)
+            popped = list(self._point)
             self._point.clear()
             for _ in range(min(self._max_heavy, len(self._heavy))):
-                batch.append(self._heavy.popleft())
+                popped.append(self._heavy.popleft())
             net, generation = self.net, self._generation
-        if not batch:
+        if not popped:
             return 0
+
+        finished: list[QueryResult] = []
+        try:
+            self._pump_round(popped, net, generation, finished)
+        except Exception as e:
+            answered = {r.rid for r in finished}
+            msg = f"pump fault: {type(e).__name__}: {e}"
+            for p in popped:
+                if p.rid not in answered:
+                    finished.append(
+                        QueryResult(p.rid, p.creq.kind, None, error=msg)
+                    )
+            with self._lock:
+                self._pump_faults += 1
+
+        with self._lock:
+            for r in finished:
+                self._results[r.rid] = r
+            # bound the store against fire-and-forget clients: drop the
+            # oldest-stored results first (insertion-ordered dict),
+            # skipping rids an in-progress serve() replay has claimed —
+            # one scan per round, not one per drop (claimed entries sit
+            # at the front and would make repeated next() quadratic)
+            excess = len(self._results) - self._result_limit
+            if excess > 0:
+                victims = []
+                for k in self._results:
+                    if k not in self._claimed:
+                        victims.append(k)
+                        if len(victims) == excess:
+                            break
+                for k in victims:
+                    self._results.pop(k)
+                self._results_dropped += len(victims)
+            self._served += len(finished)
+            self._done.notify_all()
+        return len(finished)
+
+    def _pump_round(
+        self, popped: list[_Pending], net, generation: int,
+        finished: list[QueryResult],
+    ) -> None:
+        """The fallible middle of a pump round; appends to ``finished``."""
+        # deadline sweep first: a request that expired while queued gets
+        # an error result, never a stale answer (checked once, at pop
+        # time — an in-flight dispatch is never abandoned mid-compute)
+        now = time.monotonic()
+        batch: list[_Pending] = []
+        expired = 0
+        for p in popped:
+            if p.deadline is not None and now >= p.deadline:
+                finished.append(QueryResult(
+                    p.rid, p.creq.kind, None,
+                    error="DeadlineExceeded: request expired in queue",
+                ))
+                expired += 1
+            else:
+                batch.append(p)
+        if expired:
+            with self._lock:
+                self._deadline_expired += expired
 
         # requests canonicalized against an older network re-resolve here,
         # at pop time and outside the lock (a mutation sweep re-resolving
         # thousands of filter specs under the lock would stall every
         # client): filter specs bind to the popped network, and a request
         # this network can't satisfy becomes a per-request error result
-        finished: list[QueryResult] = []
         live: list[_Pending] = []
         for p in batch:
             if p.gen == generation:
@@ -688,9 +848,9 @@ class GraphServeEngine:
                 # cache; this batch's results were computed against the
                 # pre-mutation network and must not re-enter it
                 cacheable = self._generation == generation
-                for (key, _), val, err in zip(entries, values, errs):
+                for (key, creq), val, err in zip(entries, values, errs):
                     if err is None and cacheable:
-                        self._cache.put(key, val)
+                        self._cache.put(key, val, creq.scopes)
                     # duplicates coalesced into this job share the result
                     # without recomputation — flagged cached like LRU hits
                     # (a failed dispatch shared nothing: plain error records)
@@ -702,29 +862,6 @@ class GraphServeEngine:
                             QueryResult(p.rid, kind, val, cached=shared,
                                         error=err)
                         )
-
-        with self._lock:
-            for r in finished:
-                self._results[r.rid] = r
-            # bound the store against fire-and-forget clients: drop the
-            # oldest-stored results first (insertion-ordered dict),
-            # skipping rids an in-progress serve() replay has claimed —
-            # one scan per round, not one per drop (claimed entries sit
-            # at the front and would make repeated next() quadratic)
-            excess = len(self._results) - self._result_limit
-            if excess > 0:
-                victims = []
-                for k in self._results:
-                    if k not in self._claimed:
-                        victims.append(k)
-                        if len(victims) == excess:
-                            break
-                for k in victims:
-                    self._results.pop(k)
-                self._results_dropped += len(victims)
-            self._served += len(finished)
-            self._done.notify_all()
-        return len(finished)
 
     def serve(self, requests: Iterable[dict]) -> list[QueryResult]:
         """Submit a request stream and pump until every result is in;
@@ -830,7 +967,15 @@ class GraphServeEngine:
                     )
                     if self._stopping and not (self._point or self._heavy):
                         return
-                self.pump()
+                try:
+                    self.pump()
+                except Exception:
+                    # pump() degrades faults to per-request error results
+                    # itself; this is the last-ditch guard (e.g. a fault
+                    # in the pop phase) so the thread survives and the
+                    # still-queued requests get retried next round
+                    with self._lock:
+                        self._pump_faults += 1
 
         self._thread = threading.Thread(
             target=loop, name="graph-serve-pump", daemon=True
@@ -853,10 +998,13 @@ class GraphServeEngine:
     def __exit__(self, *exc) -> None:
         self.stop()
 
-    # -- mutating ops (explicit cache invalidation) --------------------------
+    # -- mutating ops (scoped invalidation; WAL-first when durable) ----------
 
-    def update_network(self, net) -> None:
-        """Rebind the resident network; every cached result is dropped.
+    def _commit_mutation(
+        self, net, *, layer_scopes: frozenset | None = None,
+        attr: str | None = None, everything: bool = False,
+    ) -> None:
+        """Rebind the network and invalidate exactly what the op touched.
 
         Bumping the generation lazily re-canonicalizes queued requests at
         pop time (``pump``), so a filter spec resolved at submit time
@@ -867,31 +1015,136 @@ class GraphServeEngine:
         under (the request happened before the mutation) but never
         re-enter the cache — ``pump`` checks the generation before
         ``put``.
+
+        With ``scoped_invalidation`` (the default), only cache entries
+        whose layer-scope set intersects ``layer_scopes`` are evicted;
+        ``set_attr`` evicts none (entries under the pre-mutation mask
+        content become unreachable through the filter fingerprint in the
+        cache key — any key that still hits denotes a mask the mutation
+        did not change, for which the cached result is bit-identical to
+        a recompute). The filter memo keeps every mask whose attribute
+        the op did not touch: masks read only the attribute store, so a
+        layer mutation invalidates none of them and ``set_attr``
+        invalidates exactly its own attribute's entries; survivors are
+        re-tagged to the new generation (they stay content-correct — an
+        entry whose attribute mutated was just dropped, and
+        ``update_network``, which can change anything, clears the memo).
         """
         with self._lock:
             self.net = net
-            self._cache.invalidate()
-            self._filter_memo.clear()
             self._generation += 1
+            gen = self._generation
+            if everything or not self.scoped_invalidation:
+                self._cache.invalidate()
+                self._filter_memo.clear()
+                return
+            if layer_scopes:
+                self._cache.invalidate(scopes=layer_scopes)
+            if attr is not None:
+                for key in [k for k in self._filter_memo if k[1] == attr]:
+                    del self._filter_memo[key]
+            for key, (_, mask, fp) in list(self._filter_memo.items()):
+                self._filter_memo[key] = (gen, mask, fp)
+
+    @staticmethod
+    def _layer_mutation_scopes(name: str) -> frozenset:
+        # a layer mutation hits entries naming that layer AND every
+        # whole-network (layers=None) entry
+        return frozenset((f"layer:{name}", ALL_LAYERS_SCOPE))
+
+    def update_network(self, net) -> None:
+        """Rebind the resident network; every cached result is dropped
+        (an arbitrary replacement can change anything). With a durable
+        store, the replacement is checkpointed as a snapshot covering
+        the current WAL position before the engine rebinds."""
+        if self._store is not None:
+            self._store.replace(net)
+        self._commit_mutation(net, everything=True)
 
     def set_attr(self, name: str, nodes, values, kind: str | None = None):
         from repro.core import api
 
-        self.update_network(
-            api.setnodeattr(self.net, name, nodes, values, kind=kind)
-        )
+        name = str(name)
+        if self._store is None:
+            net = api.setnodeattr(self.net, name, nodes, values, kind=kind)
+        else:
+            from repro.core.wal import make_set_attr_op
+
+            if kind is None:
+                # pin the kind at log time so replay cannot re-infer
+                # differently against a partially-recovered store
+                ns = self.net.nodeset
+                kind = (ns.attrs.column(name).kind
+                        if name in ns.attrs.names
+                        else api._infer_kind(values))
+            net = self._store.apply(
+                make_set_attr_op(name, nodes, values, kind=kind)
+            )
+        self._commit_mutation(net, attr=name)
         return self.net
 
     def delete_layer(self, name: str):
         from repro.core import api
 
-        self.update_network(api.deletelayer(self.net, name))
+        name = str(name)
+        if self._store is None:
+            net = api.deletelayer(self.net, name)
+        else:
+            from repro.core.wal import make_delete_layer_op
+
+            net = self._store.apply(make_delete_layer_op(name))
+        self._commit_mutation(
+            net, layer_scopes=self._layer_mutation_scopes(name)
+        )
         return self.net
 
     def import_layer(self, name: str, file: str, **kw):
         from repro.core import api
 
-        self.update_network(api.importlayer(self.net, name, file, **kw))
+        name = str(name)
+        if self._store is None:
+            net = api.importlayer(self.net, name, file, **kw)
+        else:
+            # the WAL record inlines the parsed edge list: recovery must
+            # not depend on the imported file still existing unchanged
+            net = self._store.apply(
+                _import_layer_op_from_file(self.net, name, file, **kw)
+            )
+        self._commit_mutation(
+            net, layer_scopes=self._layer_mutation_scopes(name)
+        )
+        return self.net
+
+    def add_edges(self, layer: str, src, dst, values=None):
+        from repro.core import api
+
+        layer = str(layer)
+        if self._store is None:
+            net = api.addedges(self.net, layer, src, dst, values=values)
+        else:
+            from repro.core.wal import make_add_edges_op
+
+            net = self._store.apply(
+                make_add_edges_op(layer, src, dst, values)
+            )
+        self._commit_mutation(
+            net, layer_scopes=self._layer_mutation_scopes(layer)
+        )
+        return self.net
+
+    def delete_edges(self, layer: str, src, dst):
+        from repro.core import api
+
+        layer = str(layer)
+        if self._store is None:
+            net = api.deleteedges(self.net, layer, src, dst)
+        else:
+            from repro.core.wal import make_delete_edges_op
+
+            net = self._store.apply(make_delete_edges_op(layer, src, dst))
+        self._commit_mutation(
+            net, layer_scopes=self._layer_mutation_scopes(layer)
+        )
         return self.net
 
     # -- stats ---------------------------------------------------------------
@@ -907,10 +1160,41 @@ class GraphServeEngine:
                 "pending_heavy": len(self._heavy),
                 "uncollected": len(self._results),
                 "results_dropped": self._results_dropped,
+                "deadline_expired": self._deadline_expired,
+                "pump_faults": self._pump_faults,
                 "batches": dict(self._batches),
                 "dispatched": dict(self._dispatched),
                 "cache": self._cache.stats(),
+                "durable_lsn": (
+                    None if self._store is None else self._store.last_lsn
+                ),
             }
+
+
+def _import_layer_op_from_file(net, name: str, file: str, **kw) -> dict:
+    """Parse an import-layer TSV into a self-contained WAL op.
+
+    Goes through ``import_layer_tsv`` (same validation/defaulting as the
+    non-durable path) and then re-extracts the built layer's logical
+    edge list, so the logged op replays to a bit-identical layer without
+    the source file.
+    """
+    from repro.core.io import import_layer_tsv
+    from repro.core.layers import (
+        LayerTwoMode, _csr_coo, _one_mode_logical_edges,
+    )
+    from repro.core.wal import make_import_layer_op
+
+    layer = import_layer_tsv(file, net.n_nodes, **kw)
+    if isinstance(layer, LayerTwoMode):
+        rows, cols, _ = _csr_coo(layer.memb)
+        return make_import_layer_op(
+            name, rows, cols, mode=2, n_hyperedges=layer.n_hyperedges
+        )
+    src, dst, vals = _one_mode_logical_edges(layer)
+    return make_import_layer_op(
+        name, src, dst, mode=1, directed=layer.directed, values=vals
+    )
 
 
 # ---------------------------------------------------------------------------

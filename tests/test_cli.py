@@ -286,3 +286,57 @@ def test_khop_with_filter_excludes_alters():
     s.run_line("vips = selectnodes(net, attr = vip, op = eq, value = true)")
     rec = json.loads(s.run_line("khop(net, 0, k = 2, filter = vips)"))
     assert rec["result"][0]["count"] == 0  # only node 0 passes; no alters
+
+
+# ---------------------------------------------------------------------------
+# Durability commands (addedges / deleteedges / savestore / recovernet /
+# wallog)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_edge_mutation_and_store_roundtrip(tmp_path):
+    """addedges/deleteedges mutate the bound net; savestore + recovernet
+    round-trip it through a snapshot, and wallog reads the mutation log."""
+    d = tmp_path / "state"
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    deg0 = json.loads(s.run_line("getdegree(net, 1)"))["result"]
+    s.run_line("addedges(net, Random, src = 1;1, dst = 490;491)")
+    deg1 = json.loads(s.run_line("getdegree(net, 1)"))["result"]
+    assert deg1 == deg0 + 2
+    s.run_line("deleteedges(net, Random, src = 1, dst = 490)")
+    assert json.loads(s.run_line("getdegree(net, 1)"))["result"] == deg0 + 1
+
+    out = json.loads(s.run_line(f'savestore(net, dir = "{d}")'))["result"]
+    assert out["dir"] == str(d)
+    rec = json.loads(s.run_line(f'rec = recovernet(dir = "{d}")'))["result"]
+    assert rec["replayed"] == 0  # snapshot-only store: nothing to replay
+    assert json.loads(s.run_line("getdegree(rec, 1)"))["result"] == deg0 + 1
+    # snapshot-only store has an empty log
+    assert json.loads(s.run_line(f'wallog(dir = "{d}")'))["result"] == []
+
+
+def test_cli_wallog_lists_durable_mutations(tmp_path):
+    """A store mutated through the durable engine shows its ops in wallog."""
+    from repro.core.snapshot import DurableStore
+    from repro.serve import GraphServeEngine
+
+    d = tmp_path / "state"
+    s = Session(mode="json")
+    s.run_script(SCRIPT)
+    store = DurableStore.create(d, s.env["net"])
+    engine = GraphServeEngine(store=store)
+    engine.add_edges("Random", [1, 2], [490, 491])
+    engine.delete_layer("Workplaces")
+    store.close()
+
+    rows = json.loads(s.run_line(f'wallog(dir = "{d}")'))["result"]
+    assert [r["op"] for r in rows] == ["add_edges", "delete_layer"]
+    assert [r["lsn"] for r in rows] == [0, 1]
+    rec = json.loads(s.run_line(f'rec = recovernet(dir = "{d}")'))["result"]
+    assert rec["replayed"] == 2
+    names = {
+        l["name"]
+        for l in json.loads(s.run_line("listlayers(rec)"))["result"]
+    }
+    assert names == {"Random"}

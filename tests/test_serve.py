@@ -588,3 +588,237 @@ def test_cli_serve_text_and_json(net, tmp_path, capsys):
     # lands in a later round, a coalesced dupe when in the same round
     stats = result["stats"]
     assert stats["cache"]["hits"] + stats["coalesced_dupes"] >= 1
+
+
+# -- scoped invalidation (durable mutation engine PR) ------------------------
+
+
+def _apply_sweep_mutation(engine, step: int, n: int) -> None:
+    """Deterministic mutation for sweep step ``step``: rotates through
+    one-mode edge insert/delete, attribute writes, and two-mode
+    membership inserts so every invalidation scope gets exercised."""
+    k = step % 4
+    if k == 0:
+        engine.add_edges(
+            "er", [(7 * step) % n, (11 * step) % n],
+            [(13 * step + 1) % n, (17 * step + 2) % n],
+        )
+    elif k == 1:
+        engine.set_attr("grp", [(5 * step) % n], [step % 3])
+    elif k == 2:
+        engine.delete_edges("er", [(7 * step) % n], [(13 * step + 1) % n])
+    else:
+        engine.add_edges("wk", [(3 * step) % n], [step % 30])
+
+
+def test_scoped_invalidation_bit_identical_to_full(net):
+    """The acceptance property: a mixed mutation/query sweep served under
+    scoped invalidation is bit-identical to the nuke-everything reference
+    engine AND to the per-call ground truth — while hitting the cache
+    strictly more often."""
+    scoped = GraphServeEngine(net, scoped_invalidation=True)
+    full = GraphServeEngine(net, scoped_invalidation=False)
+    trace = _mixed_trace(net, 30, seed=3)
+    for step in range(8):
+        rs = scoped.serve(trace)
+        rf = full.serve(trace)
+        for req, a, b in zip(trace, rs, rf):
+            assert (a.error is None) == (b.error is None), (a, b)
+            if a.error is None:
+                _assert_same(a.value, b.value)
+                _assert_same(a.value, run_request(scoped.net, req))
+        _apply_sweep_mutation(scoped, step, net.n_nodes)
+        _apply_sweep_mutation(full, step, net.n_nodes)
+    s, f = scoped.stats["cache"], full.stats["cache"]
+    assert s["hits"] > f["hits"], (s, f)
+    assert s["misses"] < f["misses"], (s, f)
+
+
+def test_unrelated_layer_mutation_keeps_cache_entries(net):
+    """A mutation to layer B evicts only B-scoped (and whole-network)
+    entries; an A-only entry survives and keeps serving hits."""
+    engine = GraphServeEngine(net)
+    req_a = {"kind": "degree", "u": 5, "layers": ["er"]}
+    req_b = {"kind": "degree", "u": 5, "layers": ["wk"]}
+    req_all = {"kind": "degree", "u": 5}
+    engine.serve([req_a, req_b, req_all])
+    engine.add_edges("wk", [3], [2])
+    ra, rb, rall = engine.serve([req_a, req_b, req_all])
+    assert ra.cached, "unrelated-layer entry was evicted"
+    assert not rb.cached and not rall.cached
+    _assert_same(rb.value, run_request(engine.net, req_b))
+    _assert_same(rall.value, run_request(engine.net, req_all))
+    cache = engine.stats["cache"]
+    assert cache["scoped_invalidations"] == 1
+    assert cache["entries_invalidated"] == 2
+
+
+def test_scoped_never_serves_stale_after_layer_mutation(net):
+    """Scoped eviction still drops everything the mutation could have
+    changed: the mutated layer's entry recomputes and reflects the op."""
+    engine = GraphServeEngine(net)
+    req = {"kind": "degree", "u": 0, "layers": ["er"]}
+    before = engine.serve([req])[0]
+    engine.add_edges("er", [0, 0], [290, 291])
+    after = engine.serve([req])[0]
+    assert not after.cached
+    _assert_same(after.value, run_request(engine.net, req))
+    assert after.value == before.value + 2
+
+
+def test_scoped_setattr_keeps_unrelated_filter_entries(net):
+    """set_attr evicts nothing from the result cache: entries under an
+    unchanged mask content stay hits (bit-identical), entries under the
+    touched attribute become unreachable through the fingerprint."""
+    engine = GraphServeEngine(net)
+    flt = {"attr": "grp", "op": "eq", "value": 1}
+    req = {"kind": "degree", "u": 5, "layers": ["er"], "filter": flt}
+    engine.serve([req])
+    engine.set_attr("other", [0], [1])  # unrelated attribute
+    hit = engine.serve([req])[0]
+    assert hit.cached
+    _assert_same(hit.value, run_request(engine.net, req))
+    # now flip node 5's own group membership: the mask changes, the old
+    # entry is unreachable, and the recompute reflects the new state
+    cur = int(api.getnodeattr(engine.net, "grp", [5])[0][0])
+    engine.set_attr("grp", [5], [0 if cur == 1 else 1])
+    miss = engine.serve([req])[0]
+    assert not miss.cached
+    _assert_same(miss.value, run_request(engine.net, req))
+
+
+# -- per-request deadlines ---------------------------------------------------
+
+
+def test_request_deadline_expires_in_queue(net):
+    engine = GraphServeEngine(net)
+    rid = engine.submit({"kind": "degree", "u": 3, "timeout": 0.001})
+    time.sleep(0.01)
+    engine.pump()
+    r = engine.result(rid)
+    assert r.error is not None and "DeadlineExceeded" in r.error
+    assert engine.stats["deadline_expired"] == 1
+    # the same request without a deadline serves normally afterwards
+    rid = engine.submit({"kind": "degree", "u": 3})
+    engine.pump()
+    assert engine.result(rid).error is None
+
+
+def test_default_timeout_and_validation(net):
+    engine = GraphServeEngine(net, default_timeout=0.001)
+    rid = engine.submit({"kind": "degree", "u": 3})
+    time.sleep(0.01)
+    engine.pump()
+    assert "DeadlineExceeded" in engine.result(rid).error
+    with pytest.raises(ValueError, match="timeout"):
+        engine.submit({"kind": "degree", "u": 3, "timeout": -1})
+    # a generous deadline never fires on a healthy pump
+    engine2 = GraphServeEngine(net, default_timeout=60)
+    assert engine2.serve([{"kind": "degree", "u": 3}])[0].error is None
+    assert engine2.stats["deadline_expired"] == 0
+
+
+# -- guarded pump (satellite bugfix regression) ------------------------------
+
+
+def test_pump_thread_survives_injected_fault(net):
+    """A fault OUTSIDE the per-group executor guard (here: the cache
+    pass) must produce error results for the popped requests and leave
+    the background pump thread alive for the next round — the pre-fix
+    engine hung queued clients forever."""
+    engine = GraphServeEngine(net).start()
+    try:
+        orig_get = engine._cache.get
+
+        def broken_get(key):
+            raise RuntimeError("injected cache fault")
+
+        engine._cache.get = broken_get
+        rid = engine.submit({"kind": "degree", "u": 3})
+        r = engine.result(rid, timeout=10)
+        assert r is not None, "client hung on a pump fault"
+        assert "pump fault" in r.error and "injected cache fault" in r.error
+        # the thread survived and serves cleanly once the fault clears
+        engine._cache.get = orig_get
+        assert engine._thread.is_alive()
+        rid = engine.submit({"kind": "degree", "u": 4})
+        r = engine.result(rid, timeout=10)
+        assert r is not None and r.error is None
+        assert engine.stats["pump_faults"] >= 1
+    finally:
+        engine.stop()
+
+
+def test_pump_fault_inline_reports_all_popped_requests(net):
+    """Inline pump: every request popped into the faulting round gets an
+    error result (none silently lost), queued-later requests unaffected."""
+    engine = GraphServeEngine(net)
+    rids = [engine.submit({"kind": "degree", "u": i}) for i in range(4)]
+    engine._cache.get = lambda key: (_ for _ in ()).throw(
+        RuntimeError("boom")
+    )
+    engine.pump()
+    for rid in rids:
+        r = engine.result(rid)
+        assert r is not None and "pump fault" in r.error
+    engine._cache.get = _ResultCacheGet = type(engine._cache).get.__get__(
+        engine._cache
+    )
+    assert engine.serve([{"kind": "degree", "u": 9}])[0].error is None
+
+
+# -- durable store integration -----------------------------------------------
+
+
+def test_durable_engine_mutations_recover(net, tmp_path):
+    """Engine mutations routed through a DurableStore replay to the
+    exact served network after a (simulated) crash."""
+    from repro.core.snapshot import DurableStore, recover
+
+    store = DurableStore.create(tmp_path / "s", net)
+    engine = GraphServeEngine(store=store)
+    engine.add_edges("er", [0, 1], [5, 6])
+    engine.set_attr("grp", [2], [2])
+    engine.delete_edges("er", [0], [5])
+    api.exportlayer(net, "er", str(tmp_path / "er.tsv"))
+    engine.import_layer("imported", str(tmp_path / "er.tsv"))
+    reqs = [
+        {"kind": "degree", "u": 0, "layers": ["er"]},
+        {"kind": "degree", "u": 0, "layers": ["imported"]},
+        {"kind": "alters", "u": 2, "max_alters": 64},
+    ]
+    served = engine.serve(reqs)
+    assert engine.stats["durable_lsn"] == 3
+    store.close()  # crash: only the disk state survives
+    rnet, info = recover(tmp_path / "s")
+    assert info.replayed == 4
+    for req, r in zip(reqs, served):
+        _assert_same(r.value, run_request(rnet, req))
+
+
+def test_durable_engine_fail_closed_keeps_serving(net, tmp_path,
+                                                  monkeypatch):
+    """A WAL write error rejects the mutation and the engine keeps
+    serving the acknowledged (pre-mutation) state — which recovery
+    agrees with."""
+    from repro.core import wal as walmod
+    from repro.core.snapshot import DurableStore, recover
+    from repro.core.wal import WALWriteError
+
+    store = DurableStore.create(tmp_path / "s", net)
+    engine = GraphServeEngine(store=store)
+    req = {"kind": "degree", "u": 0, "layers": ["er"]}
+    before = engine.serve([req])[0]
+    monkeypatch.setattr(
+        walmod.os, "fsync",
+        lambda fd: (_ for _ in ()).throw(OSError("injected")),
+    )
+    with pytest.raises(WALWriteError):
+        engine.add_edges("er", [0], [250])
+    monkeypatch.undo()
+    after = engine.serve([req])[0]
+    assert after.cached  # nothing was invalidated by the rejected op
+    _assert_same(after.value, before.value)
+    rnet, _ = recover(tmp_path / "s")
+    _assert_same(before.value, run_request(rnet, req))
+    store.close()

@@ -56,6 +56,17 @@ PAIRS: list[tuple[str, str, str, float]] = [
     # to a full flush drives the ratio to exactly 1.0 and trips the gate.
     ("BENCH_6.json", "serve_mut/cache_misses_global",
      "serve_mut/cache_misses_scoped", 1.6),
+    # Table 1 at scale: BYTE ratios, deterministic for the fixed recipe
+    # and seeds (no timing noise). projection/twomode is the measured
+    # compression ratio (smoke ~990:1 at 50k nodes); a PR that silently
+    # widens the narrowed dtypes or materializes projections collapses it.
+    ("BENCH_7.json", "table1_scale/projection_bytes",
+     "table1_scale/twomode_bytes", 450.0),
+    # budget/peak RSS of the streaming 10M-node build in its own process
+    # (smoke: 3 GB budget vs ~240 MB peak; ref 2.0 keeps noise headroom
+    # for CI runners with a fatter jax baseline RSS).
+    ("BENCH_7.json", "table1_scale/rss_budget_bytes",
+     "table1_scale/peak_rss_bytes", 2.0),
 ]
 
 

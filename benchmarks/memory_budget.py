@@ -1,0 +1,99 @@
+"""CI memory-budget smoke: streaming TSV ingest under a fixed peak-RSS cap.
+
+Generates a ~1M-membership two-mode TSV, then imports it through the
+streaming path (``import_layer_tsv`` → chunked counting-sort CSR
+builders) in a CHILD process and asserts the child's process-lifetime
+peak RSS (``resource.getrusage`` ru_maxrss) stays under a fixed budget.
+The child process matters: ru_maxrss is a high-water mark, so measuring
+in-process would fold the TSV generation into the number.
+
+The budget is sized so the ingest has to actually stream — an import
+that reverts to slurping the whole file into Python lists, or a CSR
+build that reverts to the int64-key argsort path, blows through it.
+
+    python benchmarks/memory_budget.py              # generate + measure
+    python benchmarks/memory_budget.py --budget-mb 1800
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+N_NODES = 200_000
+PER_NODE = 5                  # -> 1M membership rows
+N_HYPEREDGES = 10_000         # < 2^16: exercises uint16 narrowing
+CHUNK_ROWS = 100_000          # 10 streamed chunks over the file
+DEFAULT_BUDGET_MB = 768       # measured peak ~212 MB; jax baseline included
+
+
+def generate_tsv(path: Path) -> int:
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    nodes = np.repeat(np.arange(N_NODES, dtype=np.int64), PER_NODE)
+    hyper = rng.integers(0, N_HYPEREDGES, nodes.size, dtype=np.int64)
+    np.savetxt(path, np.column_stack([nodes, hyper]), fmt="%d",
+               delimiter="\t")
+    return nodes.size
+
+
+def child(tsv: str, budget_bytes: int) -> int:
+    """Import the TSV via the streaming path; fail if peak RSS > budget."""
+    import resource
+
+    import numpy as np
+
+    from repro.core.io import import_layer_tsv
+
+    layer = import_layer_tsv(
+        tsv, n_nodes=N_NODES, mode=2, n_hyperedges=N_HYPEREDGES,
+        chunk_rows=CHUNK_ROWS,
+    )
+    assert layer.n_memberships > 0.99 * N_NODES * PER_NODE  # dedup-only loss
+    assert np.asarray(layer.memb.indices).dtype == np.uint16, (
+        "narrowing regressed: memb indices should be uint16 at 10k groups"
+    )
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    print(f"memberships={layer.n_memberships} peak_rss_mb={peak // 2**20} "
+          f"budget_mb={budget_bytes // 2**20}")
+    if peak > budget_bytes:
+        print(
+            f"FAIL: streaming import peaked at {peak / 2**20:.0f} MB, over "
+            f"the {budget_bytes / 2**20:.0f} MB budget", file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--budget-mb", type=int, default=DEFAULT_BUDGET_MB)
+    ap.add_argument("--child", metavar="TSV", default=None,
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    budget = args.budget_mb * 2**20
+    if args.child:
+        return child(args.child, budget)
+
+    with tempfile.TemporaryDirectory() as td:
+        tsv = Path(td) / "memberships.tsv"
+        n = generate_tsv(tsv)
+        print(f"# generated {n:,} membership rows at {tsv}")
+        env = dict(os.environ)
+        src = str(Path(__file__).resolve().parents[1] / "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, __file__, "--child", str(tsv),
+             "--budget-mb", str(args.budget_mb)],
+            env=env,
+        )
+    return proc.returncode
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,7 @@ RESULTS_FILTERED: dict[str, float] = {}  # filtered workload (BENCH_2.json)
 RESULTS_TRAVERSAL: dict[str, float] = {}  # traversal workload (BENCH_4.json)
 RESULTS_SERVE: dict[str, float] = {}  # serving workload (BENCH_5.json)
 RESULTS_SERVE_MUT: dict[str, float] = {}  # mutating serve workload (BENCH_6.json)
+RESULTS_SCALE: dict[str, float] = {}  # 10M-node Table 1 workload (BENCH_7.json)
 
 
 def emit(
@@ -82,29 +83,72 @@ def build_benchmark_network():
     return net
 
 
-def table1_memory(net) -> None:
-    from repro.core import memory_report
+def table1_memory(net, build_seconds: float | None = None) -> None:
+    """Paper Table 1 rows with REAL values: the row value is the measured
+    quantity itself (bytes, ratio, seconds, RSS) — not a placeholder 0."""
+    from repro.core import memory_report, peak_rss
 
     rep = memory_report(net)
     for layer in rep.layers:
-        derived = f"bytes={layer.nbytes};edges={layer.n_edges}"
+        derived = f"edges={layer.n_edges};mode={layer.mode}"
+        emit(f"table1/{layer.name}_bytes", float(layer.nbytes), derived)
         if layer.mode == 2:
-            derived += (
-                f";eq_projected={layer.equivalent_projected_edges}"
-                f";compression={layer.compression_ratio:.0f}:1"
+            emit(
+                f"table1/{layer.name}_compression", layer.compression_ratio,
+                f"{derived};eq_projected={layer.equivalent_projected_edges}",
             )
-        emit(f"table1/{layer.name}", 0.0, derived)
-    emit("table1/total", 0.0, f"bytes={rep.total_nbytes}")
+    emit("table1/total_bytes", float(rep.total_nbytes),
+         f"n_nodes={net.n_nodes}")
+    if build_seconds is not None:
+        emit("table1/build_seconds", build_seconds,
+             f"n_nodes={net.n_nodes}")
+    emit("table1/peak_rss_bytes", float(peak_rss()),
+         "process high-water (build + table1)")
 
-    # analytic reproduction at full paper scale (20M nodes, 400M memberships)
+    # analytic reproduction at full paper scale (20M nodes, 400M
+    # memberships, 10k hyperedges) under the narrowed dtype policy:
+    # memb indices are uint16 (hyperedge ids < 2^16), members int32.
     memb = 400_000_000
-    csr_bytes = 4 * (2 * memb) + 4 * (20_000_001) + 4 * 10_001
+    csr_bytes = (2 * memb + 4 * 20_000_001) + (4 * memb + 4 * 10_001)
     ratio = 8 * 8e12 / csr_bytes
     emit(
-        "table1/paper_scale_analytic", 0.0,
-        f"csr_gb={csr_bytes / 2**30:.2f};eq=8e12;compression={ratio:.0f}:1"
-        ";paper_claim=2000:1",
+        "table1/paper_scale_analytic_compression", ratio,
+        f"csr_gb={csr_bytes / 2**30:.2f};eq=8e12;paper_claim=2000:1",
     )
+
+
+def table1_scale() -> None:
+    """Paper Table 1 measured for real at 10M+ nodes (BENCH_7.json).
+
+    Spawns benchmarks/table1_scale.py as a child process — a register-
+    style household/workplace/school network built entirely through the
+    streaming chunked-ingest path — so ``ru_maxrss`` covers exactly one
+    build. The child enforces its own peak-RSS budget (non-zero exit on
+    overrun); compare.py gates the compression and budget/peak ratios.
+    """
+    import json
+    import subprocess
+    import sys
+    import tempfile
+    from pathlib import Path
+
+    script = Path(__file__).parent / "table1_scale.py"
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td) / "table1_scale.json"
+        cmd = [sys.executable, str(script), "--json", str(out)]
+        if SMOKE:
+            cmd.append("--smoke")
+        subprocess.run(cmd, check=True, env=env)
+        data = json.loads(out.read_text())
+    for key in (
+        "n_nodes", "n_memberships", "build_seconds", "twomode_bytes",
+        "projection_bytes", "compression", "peak_rss_bytes",
+        "rss_budget_bytes", "checkedge_us", "memberships_us", "alters_us",
+    ):
+        emit(f"table1_scale/{key}", float(data[key]), results=RESULTS_SCALE)
 
 
 def query_perf(net) -> None:
@@ -796,8 +840,10 @@ def main() -> None:
 
     print(f"# benchmark network: {N_NODES:,} nodes "
           f"(BENCH_SCALE={SCALE}, smoke={SMOKE})")
+    t0 = time.perf_counter()
     net = build_benchmark_network()
-    table1_memory(net)
+    table1_memory(net, build_seconds=time.perf_counter() - t0)
+    table1_scale()
     query_perf(net)
     query_perf_skewed()
     query_perf_filtered()
@@ -817,6 +863,7 @@ def main() -> None:
     print(f"# wrote {write_bench_json(RESULTS_TRAVERSAL, Path(__file__).parent / 'BENCH_4.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SERVE, Path(__file__).parent / 'BENCH_5.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SERVE_MUT, Path(__file__).parent / 'BENCH_6.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_SCALE, Path(__file__).parent / 'BENCH_7.json')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,158 @@
+"""Paper Table 1 at population scale, measured for real.
+
+Builds a register-style multilayer network — household / workplace /
+school two-mode layers, the paper's Statistics-Netherlands shape — at
+10M+ nodes and ~110M memberships entirely through the streaming chunked
+ingest path (``two_mode_from_membership_chunks`` fed by fixed-size COO
+chunks), then reports what the paper's Table 1 claims analytically:
+stored bytes vs materialized-projection bytes, real compression ratios,
+real build seconds, real process peak RSS, and query latencies on the
+result.
+
+Run as a SCRIPT in its own process (``--json out.json``): ``ru_maxrss``
+is a process-lifetime high-water mark, so the parent benchmark harness
+(benchmarks/run.py ``table1_scale``) spawns this as a subprocess to get
+a peak that covers exactly one build. Scale knobs:
+
+    python benchmarks/table1_scale.py --nodes 10000000 --json /tmp/t1.json
+    python benchmarks/table1_scale.py --smoke --json /tmp/t1s.json
+
+The layer recipe divides by the node count, so --smoke (50k nodes) runs
+the identical code shape in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+import numpy as np
+
+# Memberships drawn per node per layer; group spaces scale with n_nodes.
+# At 10M nodes: households 10M memberships over 4M groups, workplaces
+# 40M over 500k, schools 60M over 25k -> ~110M memberships, mean ~11 per
+# node (the paper's register nets run ~20).
+LAYER_RECIPE = (
+    # (name, per_node, nodes_per_group)
+    ("Households", 1, 2.5),
+    ("Workplaces", 4, 20.0),
+    ("Schools", 6, 400.0),
+)
+CHUNK = 4_000_000  # COO rows per streamed chunk
+
+
+def _membership_chunks(n_nodes: int, per_node: int, n_groups: int, seed: int):
+    """Yield (node_ids, group_ids) chunks: per_node draws for each node."""
+    rng = np.random.default_rng(seed)
+    rows_per_chunk = max(CHUNK // per_node, 1)
+    for start in range(0, n_nodes, rows_per_chunk):
+        stop = min(start + rows_per_chunk, n_nodes)
+        nodes = np.repeat(np.arange(start, stop, dtype=np.int64), per_node)
+        groups = rng.integers(0, n_groups, nodes.size, dtype=np.int64)
+        yield nodes, groups
+
+
+def build_and_measure(n_nodes: int) -> dict:
+    from repro.core import memory_report, peak_rss
+    from repro.core.api import createnetwork, createnodeset
+    from repro.core.layers import two_mode_from_membership_chunks
+
+    out: dict = {"n_nodes": n_nodes}
+    net = createnetwork(createnodeset(n_nodes))
+    total_build = 0.0
+    for i, (name, per_node, npg) in enumerate(LAYER_RECIPE):
+        n_groups = max(int(n_nodes / npg), 1)
+        t0 = time.perf_counter()
+        layer = two_mode_from_membership_chunks(
+            n_nodes, n_groups,
+            _membership_chunks(n_nodes, per_node, n_groups, seed=100 + i),
+        )
+        dt = time.perf_counter() - t0
+        total_build += dt
+        net = net.with_layer(name, layer)
+        out[f"layer/{name}/memberships"] = layer.n_memberships
+        out[f"layer/{name}/build_seconds"] = round(dt, 3)
+        print(f"# built {name}: {layer.n_memberships:,} memberships "
+              f"over {n_groups:,} groups in {dt:.1f}s", file=sys.stderr)
+
+    rep = memory_report(net)
+    two_bytes = proj_bytes = memberships = 0
+    for lr in rep.layers:
+        two_bytes += lr.nbytes
+        proj_bytes += lr.projection_nbytes
+        memberships += lr.n_edges
+        out[f"layer/{lr.name}/bytes"] = lr.nbytes
+        out[f"layer/{lr.name}/compression"] = round(lr.compression_ratio, 1)
+    out.update(
+        n_memberships=memberships,
+        build_seconds=round(total_build, 3),
+        twomode_bytes=two_bytes,
+        projection_bytes=proj_bytes,
+        compression=round(proj_bytes / max(two_bytes, 1), 1),
+    )
+
+    # query latencies on the full-size result (batched, bucketed dispatch)
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    B = 4096
+    u = jnp.asarray(rng.integers(0, n_nodes, B), dtype=jnp.int32)
+    v = jnp.asarray(rng.integers(0, n_nodes, B), dtype=jnp.int32)
+    wk = net.layer("Workplaces")
+
+    def timeit(fn):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) * 1e6
+
+    out["checkedge_us"] = round(timeit(lambda: wk.check_edge(u, v)), 1)
+    out["memberships_us"] = round(timeit(lambda: wk.memberships(u)[0]), 1)
+    out["alters_us"] = round(
+        timeit(lambda: wk.node_alters(u[:256], 1024)[0]), 1
+    )
+
+    out["peak_rss_bytes"] = peak_rss()
+    out["resident_rss_bytes"] = rep.resident_rss_bytes
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=10_000_000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="50k nodes — identical shape, CI-sized")
+    ap.add_argument("--budget-bytes", type=int, default=None,
+                    help="peak-RSS budget; exit 1 if exceeded "
+                    "(default: 12 GB full / 3 GB smoke)")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args(argv)
+    n_nodes = 50_000 if args.smoke else args.nodes
+    budget = args.budget_bytes or (
+        3 * 2**30 if args.smoke else 12 * 2**30
+    )
+
+    out = build_and_measure(n_nodes)
+    out["rss_budget_bytes"] = budget
+    print(json.dumps(out, indent=2, sort_keys=True))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    if out["peak_rss_bytes"] > budget:
+        print(
+            f"FAIL: peak RSS {out['peak_rss_bytes'] / 2**30:.2f} GB exceeds "
+            f"budget {budget / 2**30:.2f} GB", file=sys.stderr,
+        )
+        return 1
+    used = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss // 1024
+    print(f"# peak RSS {used} MB within budget {budget // 2**20} MB",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

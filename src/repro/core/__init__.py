@@ -6,11 +6,22 @@ JAX library of frozen-pytree data structures and batched, jit-compatible
 query functions. See DESIGN.md for the C#→TPU adaptation map.
 """
 
-from .csr import CSR, SENTINEL, csr_from_coo, csr_transpose
+from .csr import (
+    CSR,
+    DEFAULT_POLICY,
+    POLICY_INT32,
+    SENTINEL,
+    DtypePolicy,
+    csr_from_coo,
+    csr_from_coo_chunks,
+    csr_transpose,
+)
 from .layers import (
     LayerOneMode,
     LayerTwoMode,
+    one_mode_from_edge_chunks,
     one_mode_from_edges,
+    two_mode_from_membership_chunks,
     two_mode_from_memberships,
 )
 from .network import Network, create_network
@@ -58,7 +69,7 @@ from .traversal import (
     random_walk_batch,
 )
 from .walks import ego_sample, neighborhood_sample, random_walk
-from .memory import memory_report
+from .memory import memory_report, peak_rss, resident_rss
 from .io import TruncatedFileError, load_network, save_network
 from .layers import add_edges, delete_edges
 from .wal import (
@@ -77,9 +88,12 @@ from .snapshot import (
 )
 
 __all__ = [
-    "CSR", "SENTINEL", "csr_from_coo", "csr_transpose",
+    "CSR", "SENTINEL", "csr_from_coo", "csr_from_coo_chunks",
+    "csr_transpose",
+    "DtypePolicy", "DEFAULT_POLICY", "POLICY_INT32",
     "LayerOneMode", "LayerTwoMode",
-    "one_mode_from_edges", "two_mode_from_memberships",
+    "one_mode_from_edges", "one_mode_from_edge_chunks",
+    "two_mode_from_memberships", "two_mode_from_membership_chunks",
     "Network", "create_network",
     "AttributeStore", "NodeSelection", "Nodeset", "create_nodeset",
     "node_filter_mask",
@@ -95,7 +109,7 @@ __all__ = [
     "components_batched", "ego_batch", "khop_neighborhood",
     "random_walk_batch",
     "ego_sample", "neighborhood_sample", "random_walk",
-    "memory_report",
+    "memory_report", "peak_rss", "resident_rss",
     "load_network", "save_network",
     "TruncatedFileError",
     "add_edges", "delete_edges",

@@ -142,12 +142,12 @@ def memoryreport(net: Network):
     return memory_report(net)
 
 
-def savefile(obj: Network, file: str) -> None:
-    save_network(obj, file)
+def savefile(obj: Network, file: str, compress: bool = True) -> None:
+    save_network(obj, file, compress=compress)
 
 
-def loadfile(file: str) -> Network:
-    return load_network(file)
+def loadfile(file: str, mmap: bool = False) -> Network:
+    return load_network(file, mmap=mmap)
 
 
 # ---------------------------------------------------------------------------
@@ -455,10 +455,16 @@ def importlayer(
     net: Network, name: str, file: str, mode: int = 1,
     directed: bool = False, valued: bool = False,
     n_hyperedges: int | None = None, default_value: float | None = None,
+    chunk_rows: int | None = None, narrow: bool = True,
 ) -> Network:
+    from .csr import DEFAULT_POLICY, POLICY_INT32
+    from .io import IMPORT_CHUNK_ROWS
+
     layer = import_layer_tsv(
         file, net.n_nodes, mode=mode, directed=directed, valued=valued,
         n_hyperedges=n_hyperedges, default_value=default_value,
+        chunk_rows=IMPORT_CHUNK_ROWS if chunk_rows is None else chunk_rows,
+        policy=DEFAULT_POLICY if narrow else POLICY_INT32,
     )
     return net.with_layer(name, layer)
 

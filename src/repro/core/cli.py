@@ -241,6 +241,8 @@ class Session:
         if self.mode == "json":
             return {
                 "total_bytes": rep.total_nbytes,
+                "resident_rss_bytes": rep.resident_rss_bytes,
+                "peak_rss_bytes": rep.peak_rss_bytes,
                 "layers": [
                     {
                         "name": l.name, "mode": l.mode, "bytes": l.nbytes,
@@ -254,12 +256,12 @@ class Session:
             }, None
         return rep.pretty(), None
 
-    def _cmd_savefile(self, obj, *, file):
-        api.savefile(obj, str(file))
+    def _cmd_savefile(self, obj, *, file, compress=True):
+        api.savefile(obj, str(file), compress=bool(compress))
         return f"saved {file}", None
 
-    def _cmd_loadfile(self, *, file):
-        return None, api.loadfile(str(file))
+    def _cmd_loadfile(self, *, file, mmap=False):
+        return None, api.loadfile(str(file), mmap=bool(mmap))
 
     # -- attribute manager + selections (paper §3.1 / §3.4) -------------------
 
@@ -465,12 +467,15 @@ class Session:
         return f"exported {layer} to {file}", None
 
     def _cmd_importlayer(self, net, name, *, file, mode=1, directed=False,
-                         valued=False, n_hyperedges=None, default_value=None):
+                         valued=False, n_hyperedges=None, default_value=None,
+                         chunk_rows=None, narrow=True):
         new = api.importlayer(
             net, str(name), str(file), mode=int(mode),
             directed=bool(directed), valued=bool(valued),
             n_hyperedges=None if n_hyperedges is None else int(n_hyperedges),
             default_value=default_value,
+            chunk_rows=None if chunk_rows is None else int(chunk_rows),
+            narrow=bool(narrow),
         )
         self._rebind(net, new)
         return None, new

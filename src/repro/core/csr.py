@@ -3,19 +3,32 @@
 Threadle (C#) stores per-node edge lists in hash sets; the dense-array
 equivalent is CSR with *sorted* columns per row:
 
-  indptr  : int32[n_rows + 1]   row offsets
-  indices : int32[nnz]          column ids, sorted within each row
+  indptr  : int32[n_rows + 1]   row offsets (int64 only when nnz demands it)
+  indices : uint16|int32[nnz]   column ids, sorted within each row
   values  : float32[nnz] | None optional edge values (valued layers)
 
-Memory accounting matches the paper's: 4 bytes per edge endpoint.
-Sorted columns replace hashing — membership tests are O(log deg) branchless
-binary searches, which vectorize over query batches.
+Memory accounting matches the paper's: ≤4 bytes per edge endpoint — a
+``DtypePolicy`` narrows ``indices`` to uint16 when the column space fits
+(halving edge memory for small hyperedge spaces) and keeps ``indptr``
+at int32 unless nnz overflows it. Sorted columns replace hashing —
+membership tests are O(log deg) branchless binary searches, which
+vectorize over query batches. Query helpers promote gathered ids to
+int32, so narrowed storage is invisible to (and bit-identical for)
+every query path.
 
 Construction happens host-side in numpy (generators / file IO); the stored
-arrays are jnp and all query helpers are jit-compatible.
+arrays are jnp and all query helpers are jit-compatible. The builders run
+a chunked two-pass counting sort (``csr_from_coo_chunks``): peak scratch
+is ~2x the final CSR plus one int32 row array — the legacy
+``int64 key + stable argsort`` build peaked at ~3x the final CSR plus an
+8 B/edge key array plus argsort scratch, which is what capped ingest well
+below the paper's 10M+-node register networks.
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Iterator
 
 import numpy as np
 import jax
@@ -26,6 +39,56 @@ from .pytree import pytree_dataclass
 # Padding sentinel for gathered rows: INT32_MAX keeps sorted rows sorted.
 SENTINEL = np.int32(2**31 - 1)
 
+_INT32_MAX = 2**31 - 1
+_UINT16_MAX = 2**16 - 1
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """Integer/value width policy for CSR storage (paper-scale memory knob).
+
+    * ``narrow_indices`` — store column ids as uint16 when ``n_cols``
+      fits (ids ≤ 65535), else int32. Off = always int32 (the legacy
+      baseline; queries are bit-identical either way).
+    * ``widen_indptr`` — allow int64 row offsets when nnz exceeds the
+      int32 range. Host-side construction/serialization handles int64;
+      device queries require nnz < 2^31 per CSR (shard beyond that), so
+      widening without sharding raises at jnp upload.
+    * ``value_dtype`` — edge-value storage dtype (valued layers).
+    """
+
+    narrow_indices: bool = True
+    widen_indptr: bool = True
+    value_dtype: str = "float32"
+
+    def index_dtype(self, n_cols: int) -> np.dtype:
+        if n_cols - 1 > _INT32_MAX:
+            raise ValueError(
+                f"n_cols={n_cols} exceeds int32 id range; shard the layer"
+            )
+        if self.narrow_indices and n_cols - 1 <= _UINT16_MAX:
+            return np.dtype(np.uint16)
+        return np.dtype(np.int32)
+
+    def indptr_dtype(self, nnz: int) -> np.dtype:
+        if nnz > _INT32_MAX:
+            if not self.widen_indptr:
+                raise ValueError(
+                    f"nnz={nnz} exceeds int32 indptr range; enable "
+                    "widen_indptr or shard the layer"
+                )
+            return np.dtype(np.int64)
+        return np.dtype(np.int32)
+
+    def values_dtype(self) -> np.dtype:
+        return np.dtype(self.value_dtype)
+
+
+# Narrowing on: the engine-wide default (paper §3.2 memory switches).
+DEFAULT_POLICY = DtypePolicy()
+# The legacy always-int32 layout — the bit-identity baseline in tests.
+POLICY_INT32 = DtypePolicy(narrow_indices=False)
+
 
 def on_tpu() -> bool:
     """Backend check shared by kernel wrappers and the query dispatcher."""
@@ -35,7 +98,7 @@ def on_tpu() -> bool:
 @pytree_dataclass(static=("n_rows", "n_cols"))
 class CSR:
     indptr: jnp.ndarray  # int32[n_rows + 1]
-    indices: jnp.ndarray  # int32[nnz]
+    indices: jnp.ndarray  # uint16|int32[nnz] (DtypePolicy-narrowed storage)
     values: jnp.ndarray | None  # float32[nnz] | None
     n_rows: int
     n_cols: int
@@ -61,8 +124,228 @@ class CSR:
 
 
 # ---------------------------------------------------------------------------
-# Construction (host-side numpy)
+# Construction (host-side numpy): chunked two-pass counting sort
 # ---------------------------------------------------------------------------
+
+# Default COO chunk length for the streaming builders (~32 MB of scratch
+# per 4M-pair chunk); chunk-local argsorts bound the per-chunk scratch.
+DEFAULT_CHUNK = 4_000_000
+
+
+class ChunkArena:
+    """Arena-style scratch reuse across COO chunks.
+
+    The chunked builder runs one stable argsort + run-offset pass per
+    chunk; the argsort permutation and the permuted copies would
+    otherwise be reallocated for every chunk. The arena hands out slices
+    of persistent buffers sized to the largest chunk seen, so steady-state
+    chunk processing allocates nothing.
+    """
+
+    def __init__(self) -> None:
+        self._bufs: dict[tuple[str, np.dtype], np.ndarray] = {}
+
+    def get(self, name: str, n: int, dtype) -> np.ndarray:
+        dtype = np.dtype(dtype)
+        buf = self._bufs.get((name, dtype))
+        if buf is None or buf.size < n:
+            buf = np.empty(max(n, 1), dtype=dtype)
+            self._bufs[(name, dtype)] = buf
+        return buf[:n]
+
+
+def _run_offsets(sorted_keys: np.ndarray, out: np.ndarray) -> np.ndarray:
+    """Position of each element within its run of equal (sorted) keys."""
+    n = sorted_keys.size
+    if n == 0:
+        return out[:0]
+    starts = np.empty(n, dtype=np.int64)
+    starts[0] = 0
+    np.cumsum(sorted_keys[1:] != sorted_keys[:-1], out=starts[1:])
+    # starts now labels runs 0..R-1; subtract each run's first position
+    run_first = np.zeros(int(starts[-1]) + 1, dtype=np.int64)
+    first_mask = np.empty(n, dtype=bool)
+    first_mask[0] = True
+    np.not_equal(sorted_keys[1:], sorted_keys[:-1], out=first_mask[1:])
+    run_first[starts[first_mask]] = np.flatnonzero(first_mask)
+    offs = out[:n]
+    np.subtract(np.arange(n, dtype=np.int64), run_first[starts], out=offs)
+    return offs
+
+
+def _stable_scatter_chunk(
+    keys: np.ndarray,
+    cursor: np.ndarray,
+    payloads: list[tuple[np.ndarray, np.ndarray]],
+    arena: ChunkArena,
+) -> None:
+    """One stable counting-sort placement step for a chunk.
+
+    ``keys[i]`` names the destination bucket of element i; ``cursor``
+    holds each bucket's next free position and is advanced in place.
+    Each ``(src, dst)`` payload pair scatters ``src[i] -> dst[pos_i]``.
+    Stability: elements keep chunk order within a bucket, and the cursor
+    carries across chunks, so arrival order is preserved end-to-end.
+    """
+    n = keys.size
+    if n == 0:
+        return
+    order = np.argsort(keys, kind="stable")       # chunk-local scratch only
+    sorted_keys = arena.get("keys", n, keys.dtype)
+    np.take(keys, order, out=sorted_keys)
+    offs = _run_offsets(sorted_keys, arena.get("offs", n, np.int64))
+    dest = arena.get("dest", n, np.int64)
+    np.add(cursor[sorted_keys], offs, out=dest)
+    for src, dst in payloads:
+        dst[dest] = src[order]
+    cursor[:] += np.bincount(keys, minlength=cursor.size)
+
+
+def _as_chunks(chunks) -> Iterator[tuple]:
+    for ch in chunks:
+        if isinstance(ch, np.ndarray):
+            raise TypeError("chunks must be (rows, cols[, values]) tuples")
+        yield ch if len(ch) == 3 else (ch[0], ch[1], None)
+
+
+def csr_from_coo_chunks(
+    chunks: Iterable[tuple],
+    n_rows: int,
+    n_cols: int,
+    dedup: bool = True,
+    sum_duplicates: bool = False,
+    valued: bool = False,
+    policy: DtypePolicy | None = None,
+    arena: ChunkArena | None = None,
+) -> CSR:
+    """Build a CSR from an iterator of COO chunks — the streaming path.
+
+    Each chunk is ``(rows, cols)`` or ``(rows, cols, values)`` of equal
+    length. The build is a two-pass counting sort (by column, then
+    stably by row), so rows come out column-sorted with arrival order
+    preserved among duplicates — bit-identical to the legacy
+    ``stable argsort of row*n_cols+col`` build, without ever
+    materializing the 8 B/edge int64 key or its argsort scratch. Peak
+    memory is ~(narrowed cols + int32 rows) buffered + one int32
+    permutation array, independent of chunk count.
+
+    ``dedup`` drops duplicate (row, col) pairs keeping the FIRST
+    occurrence's value (upsert semantics); ``sum_duplicates``
+    accumulates values instead. ``valued`` forces a values array even if
+    every chunk passes ``None`` (they default to 1.0 — callers normally
+    just pass values per chunk).
+    """
+    policy = DEFAULT_POLICY if policy is None else policy
+    arena = ChunkArena() if arena is None else arena
+    idx_dt = policy.index_dtype(n_cols)
+    row_dt = np.dtype(np.int32) if n_rows - 1 <= _INT32_MAX else np.dtype(np.int64)
+    val_dt = policy.values_dtype()
+
+    # -- pass 0: validate, narrow, buffer, count ----------------------------
+    rows_buf: list[np.ndarray] = []
+    cols_buf: list[np.ndarray] = []
+    vals_buf: list[np.ndarray] = []
+    col_counts = np.zeros(n_cols, dtype=np.int64)
+    row_counts = np.zeros(n_rows, dtype=np.int64)
+    has_values = valued
+    nnz = 0
+    for rows, cols, values in _as_chunks(chunks):
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        if rows.shape != cols.shape:
+            raise ValueError("rows/cols shape mismatch")
+        if rows.size == 0:
+            continue
+        if int(rows.min()) < 0 or int(rows.max()) >= n_rows:
+            raise ValueError("row id out of range")
+        if int(cols.min()) < 0 or int(cols.max()) >= n_cols:
+            raise ValueError("col id out of range")
+        col_counts += np.bincount(cols, minlength=n_cols)
+        row_counts += np.bincount(rows, minlength=n_rows)
+        rows_buf.append(rows.astype(row_dt, copy=False if rows.dtype == row_dt else True))
+        cols_buf.append(cols.astype(idx_dt, copy=False if cols.dtype == idx_dt else True))
+        if values is not None:
+            has_values = True
+        vals_buf.append(
+            None if values is None else np.asarray(values, dtype=val_dt)
+        )
+        nnz += rows.size
+    if has_values:
+        vals_buf = [
+            np.ones(r.size, dtype=val_dt) if v is None else v
+            for r, v in zip(rows_buf, vals_buf)
+        ]
+    indptr_dt = policy.indptr_dtype(nnz)
+
+    # -- pass 1: stable counting sort by COLUMN -----------------------------
+    col_cursor = np.zeros(n_cols, dtype=np.int64)
+    np.cumsum(col_counts[:-1], out=col_cursor[1:])
+    col_indptr = np.concatenate([col_cursor, [nnz]])  # for col-of-position
+    rows_by_col = np.empty(nnz, dtype=row_dt)
+    vals_by_col = np.empty(nnz, dtype=val_dt) if has_values else None
+    while rows_buf:
+        r, c = rows_buf.pop(0), cols_buf.pop(0)
+        v = vals_buf.pop(0) if vals_buf else None
+        payloads = [(r, rows_by_col)]
+        if has_values:
+            payloads.append((v, vals_by_col))
+        _stable_scatter_chunk(c, col_cursor, payloads, arena)
+
+    # -- pass 2: stable counting sort by ROW over the col-ordered stream ----
+    indptr = np.zeros(n_rows + 1, dtype=np.int64)
+    np.cumsum(row_counts, out=indptr[1:])
+    row_cursor = indptr[:-1].copy()
+    indices = np.empty(nnz, dtype=idx_dt)
+    values_out = np.empty(nnz, dtype=val_dt) if has_values else None
+    chunk = DEFAULT_CHUNK
+    for s in range(0, nnz, chunk):
+        e = min(s + chunk, nnz)
+        r = rows_by_col[s:e]
+        # column of each position in the col-sorted stream
+        c_slice = arena.get("colof", e - s, idx_dt)
+        np.subtract(
+            np.searchsorted(col_indptr, np.arange(s, e), side="right"),
+            1, out=arena.get("colof64", e - s, np.int64),
+        )
+        c_slice[:] = arena.get("colof64", e - s, np.int64)
+        payloads = [(c_slice, indices)]
+        if has_values:
+            payloads.append((vals_by_col[s:e], values_out))
+        _stable_scatter_chunk(r, row_cursor, payloads, arena)
+    del rows_by_col, vals_by_col
+
+    # -- dedup / duplicate accumulation (adjacent after the two passes) -----
+    if (dedup or sum_duplicates) and nnz:
+        uniq = np.empty(nnz, dtype=bool)
+        uniq[0] = True
+        np.not_equal(indices[1:], indices[:-1], out=uniq[1:])
+        # equal cols across a row boundary are distinct pairs: re-mark
+        # every nonempty row's first slot (row 0's is uniq[0], already set)
+        uniq[indptr[:-1][row_counts > 0]] = True
+        if sum_duplicates and has_values:
+            seg = np.cumsum(uniq) - 1
+            values_out = np.bincount(seg, weights=values_out).astype(val_dt)
+        elif has_values:
+            values_out = values_out[uniq]
+        indices = indices[uniq]
+        kept_before = np.zeros(nnz + 1, dtype=np.int64)
+        np.cumsum(uniq, out=kept_before[1:])
+        indptr = kept_before[indptr]
+        nnz = int(indices.size)
+        indptr_dt = policy.indptr_dtype(nnz)
+
+    if nnz >= int(SENTINEL):
+        raise ValueError(
+            "nnz exceeds the int32 device range; shard the layer "
+            "(int64 indptr is host/serialization-only)"
+        )
+    return CSR(
+        indptr=jnp.asarray(indptr.astype(indptr_dt, copy=False)),
+        indices=jnp.asarray(indices),
+        values=None if not has_values else jnp.asarray(values_out),
+        n_rows=int(n_rows),
+        n_cols=int(n_cols),
+    )
 
 
 def csr_from_coo(
@@ -73,77 +356,94 @@ def csr_from_coo(
     values: np.ndarray | None = None,
     dedup: bool = True,
     sum_duplicates: bool = False,
+    policy: DtypePolicy | None = None,
 ) -> CSR:
     """Build a CSR from COO pairs. Sorts columns within rows.
 
     ``dedup`` drops duplicate (row, col) pairs (binary layers);
     ``sum_duplicates`` accumulates their values instead (valued layers).
+    Single-chunk front-end to :func:`csr_from_coo_chunks` — the legacy
+    int64-key argsort build (peak ~3x final + 8 B/edge key) is gone; the
+    counting-sort path is bit-identical at a fraction of the peak.
     """
-    rows = np.asarray(rows, dtype=np.int64)
-    cols = np.asarray(cols, dtype=np.int64)
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
     if rows.shape != cols.shape:
         raise ValueError("rows/cols shape mismatch")
-    if rows.size:
-        if rows.min() < 0 or rows.max() >= n_rows:
-            raise ValueError("row id out of range")
-        if cols.min() < 0 or cols.max() >= n_cols:
-            raise ValueError("col id out of range")
-
-    key = rows * np.int64(n_cols) + cols
-    order = np.argsort(key, kind="stable")
-    key = key[order]
-    if values is not None:
-        values = np.asarray(values, dtype=np.float32)[order]
-
-    if dedup or sum_duplicates:
-        uniq_mask = np.ones(key.shape, dtype=bool)
-        uniq_mask[1:] = key[1:] != key[:-1]
-        if sum_duplicates and values is not None:
-            seg = np.cumsum(uniq_mask) - 1
-            values = np.bincount(seg, weights=values).astype(np.float32)
-        elif values is not None:
-            values = values[uniq_mask]
-        key = key[uniq_mask]
-
-    r = (key // n_cols).astype(np.int64)
-    c = (key % n_cols).astype(np.int32)
-    counts = np.bincount(r, minlength=n_rows)
-    indptr = np.zeros(n_rows + 1, dtype=np.int32)
-    np.cumsum(counts, out=indptr[1:])
-    if indptr[-1] >= SENTINEL:
-        raise ValueError("nnz exceeds int32 range; shard the layer")
-    return CSR(
-        indptr=jnp.asarray(indptr, dtype=jnp.int32),
-        indices=jnp.asarray(c, dtype=jnp.int32),
-        values=None if values is None else jnp.asarray(values),
-        n_rows=int(n_rows),
-        n_cols=int(n_cols),
+    n = rows.size
+    chunks: list[tuple] = []
+    for s in range(0, max(n, 0), DEFAULT_CHUNK):
+        e = min(s + DEFAULT_CHUNK, n)
+        chunks.append((
+            rows[s:e], cols[s:e],
+            None if values is None else np.asarray(values)[s:e],
+        ))
+    return csr_from_coo_chunks(
+        chunks, n_rows, n_cols,
+        dedup=dedup, sum_duplicates=sum_duplicates,
+        valued=values is not None, policy=policy,
     )
 
 
-def csr_empty(n_rows: int, n_cols: int, valued: bool = False) -> CSR:
+def csr_empty(
+    n_rows: int, n_cols: int, valued: bool = False,
+    policy: DtypePolicy | None = None,
+) -> CSR:
+    policy = DEFAULT_POLICY if policy is None else policy
     return CSR(
         indptr=jnp.zeros(n_rows + 1, dtype=jnp.int32),
-        indices=jnp.zeros((0,), dtype=jnp.int32),
-        values=jnp.zeros((0,), dtype=jnp.float32) if valued else None,
+        indices=jnp.zeros((0,), dtype=policy.index_dtype(n_cols)),
+        values=(
+            jnp.zeros((0,), dtype=policy.values_dtype()) if valued else None
+        ),
         n_rows=int(n_rows),
         n_cols=int(n_cols),
     )
 
 
-def csr_transpose(csr: CSR) -> CSR:
-    """Host-side transpose (used to derive inbound edges / dual index)."""
+def csr_transpose(csr: CSR, policy: DtypePolicy | None = None) -> CSR:
+    """Host-side transpose (used to derive inbound edges / dual index).
+
+    A CSR stream iterated in storage order is already sorted by
+    (row, col); with roles swapped it is sorted by the NEW column, so
+    ONE stable counting sort by new row finishes the transpose — no
+    int64 keys, no argsort over nnz, and the expanded row-id array is
+    produced slice-by-slice instead of as one 8 B/edge allocation.
+    """
+    policy = DEFAULT_POLICY if policy is None else policy
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
-    row_ids = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
     vals = None if csr.values is None else np.asarray(csr.values)
-    return csr_from_coo(
-        indices.astype(np.int64),
-        row_ids,
-        n_rows=csr.n_cols,
-        n_cols=csr.n_rows,
-        values=vals,
-        dedup=False,
+    nnz = int(indices.size)
+    idx_dt = policy.index_dtype(csr.n_rows)
+    out_counts = np.bincount(indices, minlength=csr.n_cols)
+    out_indptr = np.zeros(csr.n_cols + 1, dtype=np.int64)
+    np.cumsum(out_counts, out=out_indptr[1:])
+    cursor = out_indptr[:-1].copy()
+    out_indices = np.empty(nnz, dtype=idx_dt)
+    out_values = None if vals is None else np.empty(nnz, dtype=vals.dtype)
+    arena = ChunkArena()
+    for s in range(0, nnz, DEFAULT_CHUNK):
+        e = min(s + DEFAULT_CHUNK, nnz)
+        # original row of each position = new column ids for this slice
+        rowof = arena.get("rowof", e - s, idx_dt)
+        rowof[:] = np.searchsorted(
+            indptr, np.arange(s, e), side="right"
+        ) - 1
+        payloads = [(rowof, out_indices)]
+        if vals is not None:
+            payloads.append((vals[s:e], out_values))
+        _stable_scatter_chunk(
+            np.asarray(indices[s:e], dtype=np.int64), cursor, payloads, arena
+        )
+    return CSR(
+        indptr=jnp.asarray(
+            out_indptr.astype(policy.indptr_dtype(nnz), copy=False)
+        ),
+        indices=jnp.asarray(out_indices),
+        values=None if out_values is None else jnp.asarray(out_values),
+        n_rows=int(csr.n_cols),
+        n_cols=int(csr.n_rows),
     )
 
 

@@ -1,22 +1,38 @@
 """File IO (paper §3.1 'Utilities'): binary serialization + text edge lists.
 
-Binary format: a single ``.npz`` (zlib-compressed, the paper's ``.bin.gz``
-analogue) holding every array under structured keys plus a JSON manifest
-describing layer types, flags, and attribute kinds. Text format: TSV edge /
-membership lists (``.tsv`` / ``.tsv.gz``).
+Binary format: a single ``.npz`` (the paper's ``.bin.gz`` analogue)
+holding every array under structured keys plus a JSON manifest describing
+layer types, flags, attribute kinds, and — since ``threadle-jax/2`` —
+the DtypePolicy-narrowed array dtypes, so a round-trip restores exactly
+the bytes it saved. ``threadle-jax/1`` files (no dtype metadata) still
+load: npz members carry their dtype natively, the manifest entry is only
+a cross-check. ``save_network(compress=False)`` writes STORED (raw) zip
+members, which ``load_network(mmap=True)`` maps straight from the page
+cache — no decompression buffer, no second host copy of the big arrays.
+
+Text format: TSV edge / membership lists (``.tsv`` / ``.tsv.gz``),
+imported through fixed-size numpy chunk buffers feeding the chunked CSR
+builders, so peak import memory tracks the finished layer rather than a
+Python list per column of the raw file.
 """
 
 from __future__ import annotations
 
 import gzip
 import json
+import zipfile
 from pathlib import Path
 
 import numpy as np
 import jax.numpy as jnp
 
-from .csr import CSR
-from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges, two_mode_from_memberships
+from .csr import CSR, DtypePolicy
+from .layers import (
+    LayerOneMode,
+    LayerTwoMode,
+    one_mode_from_edge_chunks,
+    two_mode_from_membership_chunks,
+)
 from .network import Network, create_network
 from .nodeset import AttrColumn, Nodeset
 
@@ -28,6 +44,10 @@ __all__ = [
     "import_layer_tsv",
     "load_attrs_tsv",
 ]
+
+# Default row count per import chunk: 1M rows = 16 MB of int64 id buffer
+# (+4 MB of values when valued) regardless of file size.
+IMPORT_CHUNK_ROWS = 1_000_000
 
 
 class TruncatedFileError(ValueError):
@@ -46,27 +66,51 @@ class TruncatedFileError(ValueError):
 
 
 def _pack_csr(arrays: dict, prefix: str, csr: CSR) -> dict:
-    arrays[f"{prefix}.indptr"] = np.asarray(csr.indptr)
-    arrays[f"{prefix}.indices"] = np.asarray(csr.indices)
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    arrays[f"{prefix}.indptr"] = indptr
+    arrays[f"{prefix}.indices"] = indices
+    meta = {"n_rows": csr.n_rows, "n_cols": csr.n_cols,
+            "valued": csr.values is not None,
+            "dtypes": {"indptr": indptr.dtype.name,
+                       "indices": indices.dtype.name}}
     if csr.values is not None:
-        arrays[f"{prefix}.values"] = np.asarray(csr.values)
-    return {"n_rows": csr.n_rows, "n_cols": csr.n_cols,
-            "valued": csr.values is not None}
+        values = np.asarray(csr.values)
+        arrays[f"{prefix}.values"] = values
+        meta["dtypes"]["values"] = values.dtype.name
+    return meta
 
 
 def _unpack_csr(z, prefix: str, meta: dict) -> CSR:
+    indptr = z[f"{prefix}.indptr"]
+    indices = z[f"{prefix}.indices"]
+    values = z[f"{prefix}.values"] if meta["valued"] else None
+    # dtype metadata (threadle-jax/2+) cross-checks the stored members;
+    # legacy manifests have none — the npz dtype is authoritative either way
+    for name, arr in (("indptr", indptr), ("indices", indices),
+                      ("values", values)):
+        want = meta.get("dtypes", {}).get(name)
+        if want is not None and arr is not None and arr.dtype.name != want:
+            raise ValueError(
+                f"{prefix}.{name}: manifest records dtype {want} but the "
+                f"stored array is {arr.dtype.name} — corrupt file"
+            )
     return CSR(
-        indptr=jnp.asarray(z[f"{prefix}.indptr"]),
-        indices=jnp.asarray(z[f"{prefix}.indices"]),
-        values=jnp.asarray(z[f"{prefix}.values"]) if meta["valued"] else None,
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(indices),
+        values=None if values is None else jnp.asarray(values),
         n_rows=meta["n_rows"],
         n_cols=meta["n_cols"],
     )
 
 
-def save_network(net: Network, path: str | Path) -> None:
+def save_network(
+    net: Network, path: str | Path, compress: bool = True
+) -> None:
+    """Serialize to one ``.npz``. ``compress=False`` writes STORED zip
+    members (larger on disk, but ``load_network(mmap=True)``-able)."""
     arrays: dict[str, np.ndarray] = {}
-    manifest: dict = {"format": "threadle-jax/1", "n_nodes": net.n_nodes,
+    manifest: dict = {"format": "threadle-jax/2", "n_nodes": net.n_nodes,
                       "layers": [], "attrs": []}
     for name, layer in zip(net.layer_names, net.layers):
         key = f"layer.{name}"
@@ -97,13 +141,59 @@ def save_network(net: Network, path: str | Path) -> None:
     arrays["__manifest__"] = np.frombuffer(
         json.dumps(manifest).encode(), dtype=np.uint8
     )
-    np.savez_compressed(Path(path), **arrays)
+    if compress:
+        np.savez_compressed(Path(path), **arrays)
+    else:
+        np.savez(Path(path), **arrays)
 
 
-def load_network(path: str | Path) -> Network:
-    z = np.load(Path(path))
+def _mmap_npz(path: Path) -> dict[str, np.ndarray]:
+    """Memory-map every member of an UNCOMPRESSED npz.
+
+    A STORED zip member is a raw ``.npy`` byte range inside the archive,
+    so each array can be ``np.memmap``-ed at its absolute data offset —
+    pages stream from the OS cache on first touch instead of the whole
+    archive being read (and copied) up front. Raises on DEFLATE members;
+    callers fall back to a regular load.
+    """
+    out: dict[str, np.ndarray] = {}
+    with zipfile.ZipFile(path) as zf, open(path, "rb") as raw:
+        for info in zf.infolist():
+            if info.compress_type != zipfile.ZIP_STORED:
+                raise ValueError(
+                    f"{path}: member {info.filename} is compressed; "
+                    "mmap load needs save_network(..., compress=False)"
+                )
+            # local file header: 30 fixed bytes + name + extra field
+            raw.seek(info.header_offset + 26)
+            name_len = int.from_bytes(raw.read(2), "little")
+            extra_len = int.from_bytes(raw.read(2), "little")
+            data_off = info.header_offset + 30 + name_len + extra_len
+            raw.seek(data_off)
+            version = np.lib.format.read_magic(raw)
+            if version == (1, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_1_0(raw)
+            else:
+                shape, fortran, dtype = np.lib.format.read_array_header_2_0(raw)
+            key = info.filename[:-4] if info.filename.endswith(".npy") else info.filename
+            out[key] = np.memmap(
+                path, dtype=dtype, mode="r", offset=raw.tell(), shape=shape,
+                order="F" if fortran else "C",
+            )
+    return out
+
+
+def load_network(path: str | Path, mmap: bool = False) -> Network:
+    """Deserialize a network. ``mmap=True`` maps arrays from an
+    uncompressed npz instead of reading the archive up front — big
+    layers stream page-by-page into the device buffers with no
+    intermediate host copy."""
+    if mmap:
+        z = _mmap_npz(Path(path))
+    else:
+        z = np.load(Path(path))
     manifest = json.loads(bytes(z["__manifest__"]).decode())
-    if manifest.get("format") != "threadle-jax/1":
+    if manifest.get("format") not in ("threadle-jax/1", "threadle-jax/2"):
         raise ValueError(f"unknown file format in {path}")
     net = create_network(int(manifest["n_nodes"]))
     ns = net.nodeset
@@ -192,24 +282,23 @@ def export_layer_tsv(net: Network, layer_name: str, path: str | Path) -> None:
                         f.write(f"{u}\t{v}\t{vals[k]}\n")
 
 
-def import_layer_tsv(
-    path: str | Path,
-    n_nodes: int,
-    mode: int = 1,
-    directed: bool = False,
-    valued: bool = False,
-    n_hyperedges: int | None = None,
-    default_value: float | None = None,
+def _iter_tsv_chunks(
+    path: Path,
+    valued: bool,
+    default_value: float | None,
+    chunk_rows: int,
 ):
-    """Inverse of export_layer_tsv. Returns a layer object.
+    """Parse a TSV edge/membership file into fixed-size numpy chunks.
 
-    With ``valued=True`` every row must carry a third (value) column —
-    rows without one previously shifted later values onto the wrong edges.
-    A missing value now raises, unless ``default_value`` is given, in
-    which case it fills the gap.
+    Yields ``(src int64[k], dst int64[k], vals float32[k]|None)`` with
+    ``k <= chunk_rows``; the preallocated chunk buffers are the ONLY
+    import-side storage, so peak parse memory is constant in file size.
+    Validation (torn rows, missing value columns) is per line, as before.
     """
-    path = Path(path)
-    src, dst, vals = [], [], []
+    sbuf = np.empty(chunk_rows, dtype=np.int64)
+    dbuf = np.empty(chunk_rows, dtype=np.int64)
+    vbuf = np.empty(chunk_rows, dtype=np.float32) if valued else None
+    k = 0
     with _open_text(path, "r") as f:
         for lineno, line in enumerate(_iter_lines(f, path), 1):
             parts = line.rstrip("\n").split("\t")
@@ -223,34 +312,80 @@ def import_layer_tsv(
                     f"edge row {parts[0]!r} has no destination column",
                 )
             try:
-                src.append(int(parts[0]))
-                dst.append(int(parts[1]))
+                sbuf[k] = int(parts[0])
+                dbuf[k] = int(parts[1])
             except ValueError:
                 raise ValueError(
                     f"{path}:{lineno}: cannot parse edge row {line!r}"
                 ) from None
             if valued:
                 if len(parts) > 2 and parts[2] != "":
-                    vals.append(float(parts[2]))
+                    vbuf[k] = float(parts[2])
                 elif default_value is not None:
-                    vals.append(float(default_value))
+                    vbuf[k] = default_value
                 else:
                     raise ValueError(
                         f"{path}:{lineno}: valued import but row "
                         f"{parts[0]!r}\\t{parts[1]!r} has no value column; "
                         "fix the file or pass default_value to fill"
                     )
-    src_a = np.asarray(src, dtype=np.int64)
-    dst_a = np.asarray(dst, dtype=np.int64)
-    if mode == 2:
-        h = n_hyperedges if n_hyperedges is not None else (
-            int(dst_a.max()) + 1 if dst_a.size else 1
+            k += 1
+            if k == chunk_rows:
+                yield (sbuf[:k].copy(), dbuf[:k].copy(),
+                       None if vbuf is None else vbuf[:k].copy())
+                k = 0
+    if k:
+        yield (sbuf[:k].copy(), dbuf[:k].copy(),
+               None if vbuf is None else vbuf[:k].copy())
+
+
+def import_layer_tsv(
+    path: str | Path,
+    n_nodes: int,
+    mode: int = 1,
+    directed: bool = False,
+    valued: bool = False,
+    n_hyperedges: int | None = None,
+    default_value: float | None = None,
+    chunk_rows: int = IMPORT_CHUNK_ROWS,
+    policy: DtypePolicy | None = None,
+):
+    """Inverse of export_layer_tsv. Returns a layer object.
+
+    Streams the file in ``chunk_rows``-sized numpy chunks straight into
+    the chunked CSR builders — nothing proportional to the file ever
+    sits in Python lists. For one-pass streaming of a two-mode layer,
+    pass ``n_hyperedges``; without it the hyperedge-id space has to be
+    discovered, so the (narrow) parsed chunks are buffered first.
+
+    With ``valued=True`` every row must carry a third (value) column —
+    rows without one previously shifted later values onto the wrong edges.
+    A missing value now raises, unless ``default_value`` is given, in
+    which case it fills the gap.
+    """
+    path = Path(path)
+    if mode == 1 and valued and not directed:
+        # re-iterable source: the undirected builder parses twice so
+        # duplicate-value resolution is chunk-size invariant
+        chunks = lambda: _iter_tsv_chunks(  # noqa: E731
+            path, valued, default_value, chunk_rows
         )
-        return two_mode_from_memberships(n_nodes, h, src_a, dst_a)
-    return one_mode_from_edges(
-        n_nodes, src_a, dst_a,
-        values=np.asarray(vals, dtype=np.float32) if valued else None,
-        directed=directed,
+    else:
+        chunks = _iter_tsv_chunks(path, valued, default_value, chunk_rows)
+    if mode == 2:
+        h = n_hyperedges
+        if h is None:
+            buffered = list(chunks)
+            h = max(
+                (int(d.max()) + 1 for _, d, _ in buffered if d.size),
+                default=1,
+            )
+            chunks = iter(buffered)
+        return two_mode_from_membership_chunks(
+            n_nodes, h, ((s, d) for s, d, _ in chunks), policy=policy,
+        )
+    return one_mode_from_edge_chunks(
+        n_nodes, chunks, directed=directed, valued=valued, policy=policy,
     )
 
 

@@ -30,9 +30,11 @@ from .pytree import pytree_dataclass, replace
 from .csr import (
     CSR,
     SENTINEL,
+    DtypePolicy,
     csr_contains,
     csr_empty,
     csr_from_coo,
+    csr_from_coo_chunks,
     csr_row_gather,
     csr_row_sample,
     csr_transpose,
@@ -46,7 +48,9 @@ __all__ = [
     "add_edges",
     "delete_edges",
     "one_mode_from_edges",
+    "one_mode_from_edge_chunks",
     "two_mode_from_memberships",
+    "two_mode_from_membership_chunks",
 ]
 
 
@@ -187,34 +191,106 @@ def one_mode_from_edges(
     allow_self: bool = False,
     store_inbound: bool = True,
     sum_duplicates: bool = False,
+    policy: DtypePolicy | None = None,
 ) -> LayerOneMode:
     """Build a one-mode layer from an edge list (host-side)."""
-    src = np.asarray(src, dtype=np.int64)
-    dst = np.asarray(dst, dtype=np.int64)
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.shape != dst.shape:
+        raise ValueError("src/dst length mismatch")
     if values is not None:
         values = np.asarray(values, dtype=np.float32)
-    if not allow_self:
-        keep = src != dst
-        src, dst = src[keep], dst[keep]
-        if values is not None:
-            values = values[keep]
-    if not directed:
-        # store both directions; csr_from_coo dedups (u,v) repeats
-        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
-        if values is not None:
-            values = np.concatenate([values, values])
-    out = csr_from_coo(
-        src, dst, n_nodes, n_nodes, values=values,
+    return one_mode_from_edge_chunks(
+        n_nodes,
+        [(src, dst, values)],
+        directed=directed,
+        allow_self=allow_self,
+        store_inbound=store_inbound,
+        sum_duplicates=sum_duplicates,
+        valued=values is not None,
+        policy=policy,
+    )
+
+
+def one_mode_from_edge_chunks(
+    n_nodes: int,
+    chunks,
+    directed: bool = False,
+    allow_self: bool = False,
+    store_inbound: bool = True,
+    sum_duplicates: bool = False,
+    valued: bool = False,
+    policy: DtypePolicy | None = None,
+) -> LayerOneMode:
+    """Streaming one-mode build from ``(src, dst[, values])`` chunk tuples.
+
+    ``chunks`` may be an iterable of chunk tuples, or a zero-arg callable
+    returning a fresh iterator (e.g. a file re-parse). Self-tie filtering
+    and undirected mirroring happen per chunk, so peak host memory tracks
+    the CSR under construction, not the raw edge list.
+
+    Duplicate (u, v) pairs dedup to the FIRST arrival. For undirected
+    builds from a re-iterable source (callable / list / tuple) the source
+    is walked twice — every forward edge, then every mirror — so the
+    arrival order (and thus which duplicate's value wins) is exactly the
+    single-chunk order, independent of chunking. A one-shot iterator
+    can't be rewound, so there the mirror of chunk k arrives before
+    chunk k+1's forward edges — same edges, but a value conflict between
+    a chunk-k (v, u) and a chunk-k+1 (u, v) resolves to chunk k's value.
+    """
+
+    def norm(ch):
+        src, dst = np.asarray(ch[0]), np.asarray(ch[1])
+        vals = ch[2] if len(ch) > 2 else None
+        if vals is not None:
+            vals = np.asarray(vals, dtype=np.float32)
+        if not allow_self:
+            keep = src != dst
+            src, dst = src[keep], dst[keep]
+            if vals is not None:
+                vals = vals[keep]
+        if valued and vals is None:
+            vals = np.ones(src.shape, np.float32)
+        return src, dst, vals
+
+    factory = (
+        chunks if callable(chunks)
+        else (lambda: iter(chunks)) if isinstance(chunks, (list, tuple))
+        else None
+    )
+
+    def gen():
+        if directed:
+            for ch in (factory() if factory else chunks):
+                yield norm(ch)
+        elif factory is not None:
+            # two passes: all forward edges, then all mirrors — the
+            # legacy concatenation order, so dedup picks the same
+            # winners regardless of chunk boundaries
+            for ch in factory():
+                yield norm(ch)
+            for ch in factory():
+                src, dst, vals = norm(ch)
+                yield (dst, src, vals)
+        else:
+            for ch in chunks:
+                src, dst, vals = norm(ch)
+                yield (src, dst, vals)
+                yield (dst, src, vals)
+
+    out = csr_from_coo_chunks(
+        gen(), n_nodes, n_nodes,
         dedup=not sum_duplicates, sum_duplicates=sum_duplicates,
+        valued=valued, policy=policy,
     )
     in_ = None
     if directed and store_inbound:
-        in_ = csr_transpose(out)
+        in_ = csr_transpose(out, policy=policy)
     return LayerOneMode(
         out=out,
         in_=in_,
         directed=directed,
-        valued=values is not None,
+        valued=valued,
         allow_self=allow_self,
         store_inbound=store_inbound,
     )
@@ -397,9 +473,15 @@ class LayerTwoMode:
         return self.members.degrees()
 
     def equivalent_projected_edges(self) -> int:
-        """Σ_h k_h(k_h−1)/2 — paper Eq. (1): size of the never-built projection."""
-        k = np.asarray(self.members.degrees(), dtype=np.int64)
-        return int(np.sum(k * (k - 1) // 2))
+        """Σ_h k_h(k_h−1)/2 — paper Eq. (1): size of the never-built projection.
+
+        Computed from host-side indptr in int64 and summed into a Python
+        int: a single >65k-member hyperedge already pushes k(k−1)/2 past
+        int32, and paper-scale sums (8e12 at 20M nodes) would overflow
+        any device-side int32 accumulation (jax x64 is disabled).
+        """
+        k = np.diff(np.asarray(self.members.indptr)).astype(np.int64)
+        return int(np.sum(k * (k - 1) // 2, dtype=np.int64))
 
 
 def two_mode_from_memberships(
@@ -407,12 +489,33 @@ def two_mode_from_memberships(
     n_hyperedges: int,
     node_ids: np.ndarray,
     hyperedge_ids: np.ndarray,
+    policy: DtypePolicy | None = None,
 ) -> LayerTwoMode:
     """Build a two-mode layer from (node, hyperedge) membership pairs."""
-    node_ids = np.asarray(node_ids, dtype=np.int64)
-    hyperedge_ids = np.asarray(hyperedge_ids, dtype=np.int64)
-    memb = csr_from_coo(node_ids, hyperedge_ids, n_nodes, n_hyperedges)
-    members = csr_transpose(memb)
+    return two_mode_from_membership_chunks(
+        n_nodes, n_hyperedges,
+        [(np.asarray(node_ids), np.asarray(hyperedge_ids))],
+        policy=policy,
+    )
+
+
+def two_mode_from_membership_chunks(
+    n_nodes: int,
+    n_hyperedges: int,
+    chunks,
+    policy: DtypePolicy | None = None,
+) -> LayerTwoMode:
+    """Streaming two-mode build from (node_ids, hyperedge_ids) chunk tuples.
+
+    Both directions of the dual index come out DtypePolicy-narrowed; the
+    transpose runs as a single counting-sort pass over the finished memb
+    CSR, so peak memory never holds a third copy of the membership list.
+    """
+    memb = csr_from_coo_chunks(
+        ((np.asarray(n), np.asarray(h)) for n, h in chunks),
+        n_nodes, n_hyperedges, policy=policy,
+    )
+    members = csr_transpose(memb, policy=policy)
     return LayerTwoMode(
         memb=memb,
         members=members,

@@ -3,18 +3,45 @@
 ``memory_report(net)`` sums actual array nbytes per layer, computes each
 two-mode layer's equivalent projected edge count (paper Eq. 1) and the
 compression ratio of pseudo-projection storage vs a materialized 8 B/edge
-projection.
+projection. Next to those *analytic* numbers it reports what the OS
+actually charges the process: current resident set (``/proc/self/status``
+VmRSS) and lifetime peak (``getrusage`` ru_maxrss) — the gap between
+analytic and resident is allocator overhead, scratch buffers, and the
+runtime itself, which Table 1 at paper scale has to budget for.
 """
 
 from __future__ import annotations
 
+import resource
 from dataclasses import dataclass, field
+from pathlib import Path
 
 from .layers import LayerTwoMode
 from .network import Network
 from .projection import projection_nbytes
 
-__all__ = ["memory_report", "MemoryReport"]
+__all__ = ["memory_report", "MemoryReport", "resident_rss", "peak_rss"]
+
+
+def resident_rss() -> int:
+    """Current resident set size in bytes (VmRSS; 0 where /proc is absent)."""
+    try:
+        for line in Path("/proc/self/status").read_text().splitlines():
+            if line.startswith("VmRSS:"):
+                return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 0
+
+
+def peak_rss() -> int:
+    """Lifetime peak resident set size of this process, in bytes.
+
+    ``ru_maxrss`` is in KiB on Linux. Note this is a high-water mark
+    since process start — benchmarks wanting a clean per-workload peak
+    run the workload in a subprocess.
+    """
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
 
 
 @dataclass
@@ -33,6 +60,8 @@ class MemoryReport:
     total_nbytes: int
     nodeset_nbytes: int
     layers: list[LayerReport] = field(default_factory=list)
+    resident_rss_bytes: int = 0
+    peak_rss_bytes: int = 0
 
     def pretty(self) -> str:
         lines = [
@@ -49,7 +78,12 @@ class MemoryReport:
         lines.append(
             f"{'nodeset attrs':<18}{'':>5}{self.nodeset_nbytes / 2**20:>12.1f}"
         )
-        lines.append(f"TOTAL {self.total_nbytes / 2**20:,.1f} MB")
+        lines.append(f"TOTAL {self.total_nbytes / 2**20:,.1f} MB (analytic)")
+        if self.resident_rss_bytes:
+            lines.append(
+                f"RSS   {self.resident_rss_bytes / 2**20:,.1f} MB resident"
+                f" / {self.peak_rss_bytes / 2**20:,.1f} MB peak (process)"
+            )
         return "\n".join(lines)
 
 
@@ -81,4 +115,6 @@ def memory_report(net: Network) -> MemoryReport:
         total_nbytes=net.nbytes,
         nodeset_nbytes=net.nodeset.nbytes,
         layers=reports,
+        resident_rss_bytes=resident_rss(),
+        peak_rss_bytes=peak_rss(),
     )

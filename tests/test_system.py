@@ -89,8 +89,12 @@ def test_table1_memory_methodology(benchmark_net):
     sizes = np.asarray(layer.hyperedge_sizes(), dtype=np.int64)
     assert wk.equivalent_projected_edges == int(np.sum(sizes * (sizes - 1) // 2))
 
-    # CSR bytes: 2 * (4 B per membership) + indptr overhead
-    expected = 4 * (2 * layer.n_memberships) + 4 * (N + 1) + 4 * (H + 1)
+    # CSR bytes: dual CSR with DtypePolicy-narrowed indices — both id
+    # spaces fit uint16 at this scale, so 2 B per membership per
+    # direction + int32 indptr overhead
+    assert np.asarray(layer.memb.indices).dtype == np.uint16
+    assert np.asarray(layer.members.indices).dtype == np.uint16
+    expected = 2 * (2 * layer.n_memberships) + 4 * (N + 1) + 4 * (H + 1)
     assert wk.nbytes == expected
 
     # compression ratio = 8 B * eq_edges / stored bytes, and it must beat

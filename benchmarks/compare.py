@@ -67,6 +67,13 @@ PAIRS: list[tuple[str, str, str, float]] = [
     # for CI runners with a fatter jax baseline RSS).
     ("BENCH_7.json", "table1_scale/rss_budget_bytes",
      "table1_scale/peak_rss_bytes", 2.0),
+    # Tail-latency SLO, not a throughput ratio: budget µs over measured
+    # open-loop p99 µs (serve frontend under an injected fault burst).
+    # The injected +10ms delay burst floors p99 near 10ms, the 50ms
+    # budget leaves ~5x; a serving-stack regression (lost NODELAY,
+    # serialized pump, retry storms) drags p99 past the budget and
+    # collapses the ratio below the reference band.
+    ("BENCH_8.json", "serve_slo/p99_budget_us", "serve_slo/p99_us", 1.5),
 ]
 
 

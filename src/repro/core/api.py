@@ -55,7 +55,7 @@ __all__ = [
     # batched traversal
     "khop", "egosample", "walkbatch", "componentsfast",
     # serving
-    "serve",
+    "serve", "servenet", "pingnet",
     # container surface
     "listlayers", "deletelayer", "describenet",
     "exportlayer", "importlayer", "subnetwork", "samplenodes",
@@ -394,6 +394,65 @@ def serve(
     )
     results = engine.serve(requests)
     return [r.to_record() for r in results], engine.stats
+
+
+def servenet(
+    net: Network, *, host: str = "127.0.0.1", port: int = 0,
+    cache_size: int = 4096, queue_limit: int = 8192,
+    max_heavy_per_round: int = 1024, deadline_ms: float | None = None,
+    **frontend_kw,
+):
+    """Start the network serve frontend over ``net`` (NDJSON over TCP).
+
+    Returns the started ``repro.serve.GraphServeFrontend``; its
+    ``.address`` is the bound ``(host, port)`` (``port=0`` picks a free
+    one). Stop with ``.close()`` (or use it as a context manager) —
+    closing drains the engine queues and joins the pump thread.
+    ``deadline_ms`` sets a default per-request budget for clients that
+    send none. Extra keyword arguments reach the frontend (admission
+    ``policy=``, ``fault_plan=``, ``store=``, ...).
+    """
+    from repro.serve.frontend import GraphServeFrontend
+
+    fe = GraphServeFrontend(
+        net=net, host=host, port=int(port),
+        default_deadline_ms=deadline_ms,
+        cache_size=int(cache_size), queue_limit=int(queue_limit),
+        max_heavy_per_round=int(max_heavy_per_round), **frontend_kw,
+    )
+    return fe.start()
+
+
+def pingnet(
+    host: str, port: int, *, deadline_ms: float | None = 2000.0,
+) -> dict:
+    """Probe a running serve frontend: round-trip latency + readiness.
+
+    Returns ``{"ok", "latency_ms", "ready", "reasons"}``; ``ok`` is
+    False (never raises) when the server is unreachable.
+    """
+    import time as _time
+
+    from repro.serve.client import GraphServeClient, ServeError
+
+    with GraphServeClient(
+        host, int(port), default_deadline_ms=deadline_ms
+    ) as client:
+        t0 = _time.perf_counter()
+        try:
+            client.ping(deadline_ms=deadline_ms)
+        except (ServeError, RuntimeError, OSError) as e:
+            return {
+                "ok": False, "latency_ms": None, "ready": False,
+                "reasons": [f"{type(e).__name__}: {e}"],
+            }
+        latency_ms = (_time.perf_counter() - t0) * 1000.0
+        ready = client.readyz()
+    return {
+        "ok": True, "latency_ms": latency_ms,
+        "ready": bool(ready.get("ready")),
+        "reasons": list(ready.get("reasons", [])),
+    }
 
 
 # ---------------------------------------------------------------------------

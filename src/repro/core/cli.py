@@ -426,6 +426,36 @@ class Session:
             )
         ), None
 
+    def _cmd_servenet(self, net, *, host="127.0.0.1", port=0, cache=4096,
+                      queuelimit=8192, maxheavy=1024, deadline=None):
+        """Start the NDJSON/TCP serve frontend; bind the handle with
+        ``srv = servenet(net, ...)`` and stop it with ``stopserve(srv)``.
+        ``deadline`` is the default per-request budget in ms."""
+        fe = api.servenet(
+            net, host=str(host), port=int(port), cache_size=int(cache),
+            queue_limit=int(queuelimit), max_heavy_per_round=int(maxheavy),
+            deadline_ms=None if deadline is None else float(deadline),
+        )
+        h, p = fe.address
+        return {"host": h, "port": p, "serving": True}, fe
+
+    def _cmd_pingnet(self, *, host="127.0.0.1", port, deadline=2000):
+        """Probe a running serve frontend (latency + readiness)."""
+        return api.pingnet(str(host), int(port),
+                           deadline_ms=float(deadline)), None
+
+    def _cmd_stopserve(self, frontend):
+        """Close a frontend started by ``servenet`` (drains + joins)."""
+        if not hasattr(frontend, "close") or not hasattr(frontend, "stats"):
+            raise CLIError("stopserve needs a servenet() handle")
+        stats = frontend.stats
+        frontend.close()
+        return {
+            "stopped": True,
+            "served": stats["engine"]["served"],
+            "requests": stats["transport"].get("requests", 0),
+        }, None
+
     # -- container surface ----------------------------------------------------
 
     def _cmd_addedges(self, net, layer, src, dst, *, values=None):

@@ -2,12 +2,19 @@
 
 One meaning: ``serve/`` serves *graph queries* from a resident Network
 (micro-batching + result cache + backpressure — see graph_engine.py).
-The LLM prefill/decode engine that used to live here moved to
-``repro.models.lm_serve``.
+The network-facing pieces layer on top: ``frontend.py`` (NDJSON/TCP
+transport + HTTP health probes), ``client.py`` (retrying client),
+``resilience.py`` (deadlines, idempotency, admission control, health),
+``faults.py`` (the deterministic chaos harness). The LLM prefill/decode
+engine that used to live here moved to ``repro.models.lm_serve``.
 """
 
+from .client import GraphServeClient, ServeError, Unavailable
+from .faults import ConnectionDropped, FaultPlan, FaultSpec, InjectedFault
+from .frontend import GraphServeFrontend
 from .graph_engine import (
     GraphServeEngine,
+    EngineClosed,
     QueryResult,
     QueueFull,
     HEAVY_KINDS,
@@ -19,17 +26,46 @@ from .graph_engine import (
     parse_trace,
     run_request,
 )
+from .resilience import (
+    AdmissionController,
+    AdmissionPolicy,
+    DeadlineExceeded,
+    IdempotencyCache,
+    RetryPolicy,
+    deadline_from_ms,
+    degraded_reference,
+    health,
+    readiness,
+)
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionPolicy",
+    "ConnectionDropped",
+    "DeadlineExceeded",
+    "EngineClosed",
+    "FaultPlan",
+    "FaultSpec",
+    "GraphServeClient",
     "GraphServeEngine",
+    "GraphServeFrontend",
+    "IdempotencyCache",
+    "InjectedFault",
     "QueryResult",
     "QueueFull",
+    "RetryPolicy",
+    "ServeError",
+    "Unavailable",
     "HEAVY_KINDS",
     "POINT_KINDS",
     "REQUEST_KINDS",
     "assert_results_equal",
     "canonical_request",
+    "deadline_from_ms",
+    "degraded_reference",
+    "health",
     "load_trace",
     "parse_trace",
+    "readiness",
     "run_request",
 ]

@@ -87,6 +87,7 @@ __all__ = [
     "GraphServeEngine",
     "QueryResult",
     "QueueFull",
+    "EngineClosed",
     "POINT_KINDS",
     "HEAVY_KINDS",
     "REQUEST_KINDS",
@@ -106,6 +107,10 @@ _DEFAULT_MAX_ALTERS = 4096
 
 class QueueFull(RuntimeError):
     """Bounded-queue backpressure: the request's cost class is saturated."""
+
+
+class EngineClosed(RuntimeError):
+    """The engine was ``close()``d: late submissions/mutations rejected."""
 
 
 @dataclass
@@ -578,6 +583,7 @@ class GraphServeEngine:
         scoped_invalidation: bool = True,
         default_timeout: float | None = None,
         store=None,
+        fault_plan=None,
     ):
         if net is None:
             if store is None:
@@ -627,11 +633,17 @@ class GraphServeEngine:
         self._deadline_expired = 0
         self._pump_faults = 0
         self._filter_memo: dict = {}
+        # chaos-harness hook (serve/faults.py): sites "engine.exec"
+        # (injected executor exception) and "pump.batch_delay" (delay
+        # between execution and scatter — the post-batch deadline check's
+        # regression site); None = no injection, zero hot-path cost
+        self._fault_plan = fault_plan
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._done = threading.Condition(self._lock)
         self._thread: threading.Thread | None = None
         self._stopping = False
+        self._closed = False
 
     # -- client surface ------------------------------------------------------
 
@@ -660,6 +672,8 @@ class GraphServeEngine:
                 raise ValueError(f"timeout must be > 0, got {timeout}")
             deadline = time.monotonic() + timeout
         with self._lock:
+            if self._closed:
+                raise EngineClosed("engine is closed; no new submissions")
             gen, net = self._generation, self.net
         # canonicalization (filter resolution can touch the attribute
         # store) runs outside the lock; if a mutation lands in between,
@@ -675,6 +689,8 @@ class GraphServeEngine:
             else (self._heavy, self._heavy_limit)
         )
         with self._lock:
+            if self._closed:  # closed while we canonicalized
+                raise EngineClosed("engine is closed; no new submissions")
             if len(q) >= limit:
                 if _count_rejection:
                     self._rejected += 1
@@ -706,6 +722,36 @@ class GraphServeEngine:
     def pending(self) -> int:
         with self._lock:
             return len(self._point) + len(self._heavy)
+
+    # -- health surface (serve/resilience.py readiness checks) ---------------
+
+    @property
+    def point_pending(self) -> int:
+        with self._lock:
+            return len(self._point)
+
+    @property
+    def heavy_pending(self) -> int:
+        with self._lock:
+            return len(self._heavy)
+
+    @property
+    def queue_limits(self) -> tuple[int, int]:
+        """(point queue limit, heavy queue limit)."""
+        return self._queue_limit, self._heavy_limit
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def pump_started(self) -> bool:
+        return self._thread is not None
+
+    @property
+    def pump_alive(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
 
     # -- micro-batching ------------------------------------------------------
 
@@ -836,11 +882,22 @@ class GraphServeEngine:
             kind = group_key[0]
             creqs = [c for _, c in entries]
             try:
+                if self._fault_plan:
+                    self._fault_plan.fire("engine.exec")
                 values = _EXECUTORS[kind](net, group_key, creqs)
+                if self._fault_plan:  # chaos: stall between exec + scatter
+                    self._fault_plan.fire("pump.batch_delay")
                 errs = [None] * len(values)
             except Exception as e:  # surface per request, don't kill the pump
                 values = [None] * len(entries)
                 errs = [f"{type(e).__name__}: {e}"] * len(entries)
+            # deadline re-check AFTER execution: a request that expired
+            # while its batch was on the device must answer
+            # DeadlineExceeded, not a stale-by-its-own-budget success.
+            # The computed value is still cached below — it is a valid
+            # result for the key; only THIS request's budget lapsed.
+            done_at = time.monotonic()
+            late = 0
             with self._lock:
                 self._batches[kind] += 1
                 self._dispatched[kind] += len(entries)
@@ -855,6 +912,15 @@ class GraphServeEngine:
                     # without recomputation — flagged cached like LRU hits
                     # (a failed dispatch shared nothing: plain error records)
                     for i, p in enumerate(jobs[key]):
+                        if (err is None and p.deadline is not None
+                                and done_at >= p.deadline):
+                            late += 1
+                            finished.append(QueryResult(
+                                p.rid, kind, None,
+                                error="DeadlineExceeded: request expired "
+                                      "during dispatch",
+                            ))
+                            continue
                         shared = i > 0 and err is None
                         if shared:
                             self._coalesced_dupes += 1
@@ -862,6 +928,7 @@ class GraphServeEngine:
                             QueryResult(p.rid, kind, val, cached=shared,
                                         error=err)
                         )
+                self._deadline_expired += late
 
     def serve(self, requests: Iterable[dict]) -> list[QueryResult]:
         """Submit a request stream and pump until every result is in;
@@ -954,6 +1021,8 @@ class GraphServeEngine:
 
     def start(self) -> "GraphServeEngine":
         """Run the pump loop on a daemon thread (one thread owns dispatch)."""
+        if self._closed:
+            raise EngineClosed("engine is closed; cannot start the pump")
         if self._thread is not None:
             return self
         self._stopping = False
@@ -984,6 +1053,8 @@ class GraphServeEngine:
         return self
 
     def stop(self) -> None:
+        """Stop the background pump (draining first); the engine stays
+        open — ``start()`` again to resume. ``close()`` is terminal."""
         if self._thread is None:
             return
         with self._lock:
@@ -992,13 +1063,40 @@ class GraphServeEngine:
         self._thread.join()
         self._thread = None
 
+    def close(self) -> None:
+        """Terminal shutdown: reject new submissions with
+        :class:`EngineClosed`, drain + answer everything already queued
+        (nothing silently lost), and join the background pump thread.
+        Idempotent; ``result()`` keeps working for already-served rids.
+
+        Before this existed, a test/server failure path that forgot
+        ``stop()`` leaked a live pump thread; ``with engine:`` now
+        guarantees the thread is joined and late submitters get a clear
+        error instead of queueing into a dead engine.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True  # submit() rejects from here on
+        if self._thread is not None:
+            self.stop()  # the pump loop drains both queues before exiting
+        else:
+            while self.pending:
+                self.pump()
+        with self._lock:
+            self._done.notify_all()
+
     def __enter__(self) -> "GraphServeEngine":
         return self
 
     def __exit__(self, *exc) -> None:
-        self.stop()
+        self.close()
 
     # -- mutating ops (scoped invalidation; WAL-first when durable) ----------
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise EngineClosed("engine is closed; no new mutations")
 
     def _commit_mutation(
         self, net, *, layer_scopes: frozenset | None = None,
@@ -1057,11 +1155,13 @@ class GraphServeEngine:
         (an arbitrary replacement can change anything). With a durable
         store, the replacement is checkpointed as a snapshot covering
         the current WAL position before the engine rebinds."""
+        self._ensure_open()
         if self._store is not None:
             self._store.replace(net)
         self._commit_mutation(net, everything=True)
 
     def set_attr(self, name: str, nodes, values, kind: str | None = None):
+        self._ensure_open()
         from repro.core import api
 
         name = str(name)
@@ -1084,6 +1184,7 @@ class GraphServeEngine:
         return self.net
 
     def delete_layer(self, name: str):
+        self._ensure_open()
         from repro.core import api
 
         name = str(name)
@@ -1099,6 +1200,7 @@ class GraphServeEngine:
         return self.net
 
     def import_layer(self, name: str, file: str, **kw):
+        self._ensure_open()
         from repro.core import api
 
         name = str(name)
@@ -1116,6 +1218,7 @@ class GraphServeEngine:
         return self.net
 
     def add_edges(self, layer: str, src, dst, values=None):
+        self._ensure_open()
         from repro.core import api
 
         layer = str(layer)
@@ -1133,6 +1236,7 @@ class GraphServeEngine:
         return self.net
 
     def delete_edges(self, layer: str, src, dst):
+        self._ensure_open()
         from repro.core import api
 
         layer = str(layer)
@@ -1202,19 +1306,38 @@ def _import_layer_op_from_file(net, name: str, file: str, **kw) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def parse_trace(text: str) -> list[dict]:
+def parse_trace(text: str, *, path: str = "<trace>") -> list[dict]:
     """Parse a request trace: one JSON object per line; ``#`` comments and
-    blank lines are skipped. See the module docstring for the schema."""
+    blank lines are skipped. See the module docstring for the schema.
+
+    A final line without a newline terminator is still a record — a
+    writer that did not get to the ``\\n`` usually still wrote complete
+    JSON, so it parses normally. If that unterminated tail is NOT
+    complete JSON it is a record torn mid-write, and the parse raises
+    ``core.io.TruncatedFileError`` (the io.py contract: replaying a
+    silently shortened trace is worse than failing) rather than the
+    generic bad-JSON ``ValueError`` a mid-file corruption gets.
+    """
     import json
 
+    lines = text.splitlines()
+    unterminated_last = bool(text) and not text.endswith(("\n", "\r"))
     out = []
-    for ln, line in enumerate(text.splitlines(), 1):
+    for ln, line in enumerate(lines, 1):
         line = line.strip()
         if not line or line.startswith("#"):
             continue
         try:
             req = json.loads(line)
         except json.JSONDecodeError as e:
+            if ln == len(lines) and unterminated_last:
+                from repro.core.io import TruncatedFileError
+
+                raise TruncatedFileError(
+                    path, ln,
+                    "final trace line has no newline terminator and is "
+                    "not complete JSON (record torn mid-write)",
+                ) from None
             raise ValueError(f"trace line {ln}: bad JSON ({e})") from None
         if not isinstance(req, dict):
             raise ValueError(f"trace line {ln}: expected an object")
@@ -1224,4 +1347,4 @@ def parse_trace(text: str) -> list[dict]:
 
 def load_trace(path: str) -> list[dict]:
     with open(path) as f:
-        return parse_trace(f.read())
+        return parse_trace(f.read(), path=str(path))

@@ -541,8 +541,10 @@ def test_threaded_clients_background_pump(net):
 def test_parse_trace_comments_and_errors():
     text = '# a comment\n\n{"kind": "degree", "u": 1}\n'
     assert parse_trace(text) == [{"kind": "degree", "u": 1}]
+    # terminated bad-JSON line: generic parse error (an *unterminated*
+    # bad final line is a torn tail — TruncatedFileError, tested below)
     with pytest.raises(ValueError, match="line 1"):
-        parse_trace("not json")
+        parse_trace("not json\n")
     with pytest.raises(ValueError, match="expected an object"):
         parse_trace("[1, 2]")
 
@@ -822,3 +824,122 @@ def test_durable_engine_fail_closed_keeps_serving(net, tmp_path,
     rnet, _ = recover(tmp_path / "s")
     _assert_same(before.value, run_request(rnet, req))
     store.close()
+
+
+# -- close() / context manager (lifecycle satellite) --------------------------
+
+
+def test_close_drains_and_rejects_late_submissions(net):
+    from repro.serve import EngineClosed
+
+    engine = GraphServeEngine(net).start()
+    rids = [engine.submit({"kind": "degree", "u": i}) for i in range(8)]
+    engine.close()
+    # everything queued before close() was answered, nothing lost
+    for rid in rids:
+        r = engine.result(rid, timeout=5)
+        assert r is not None and r.error is None
+    # the pump thread is joined and late clients get a clear error
+    assert engine.closed and not engine.pump_started
+    with pytest.raises(EngineClosed):
+        engine.submit({"kind": "degree", "u": 0})
+    with pytest.raises(EngineClosed):
+        engine.add_edges("er", [0], [1])
+    with pytest.raises(EngineClosed):
+        engine.start()
+    engine.close()  # idempotent
+
+
+def test_close_inline_engine_without_thread(net):
+    from repro.serve import EngineClosed
+
+    engine = GraphServeEngine(net)
+    rid = engine.submit({"kind": "degree", "u": 3})
+    engine.close()  # drains inline (no pump thread was ever started)
+    assert engine.result(rid).error is None
+    with pytest.raises(EngineClosed):
+        engine.submit({"kind": "degree", "u": 3})
+
+
+def test_context_manager_closes_engine(net):
+    from repro.serve import EngineClosed
+
+    with GraphServeEngine(net).start() as engine:
+        rid = engine.submit({"kind": "degree", "u": 3})
+        assert engine.result(rid, timeout=5).error is None
+    assert engine.closed and not engine.pump_started
+    with pytest.raises(EngineClosed):
+        engine.submit({"kind": "degree", "u": 3})
+
+
+# -- post-batch deadline check (satellite regression) -------------------------
+
+
+def test_deadline_expiring_mid_batch_returns_error(net):
+    """A request whose budget lapses DURING dispatch must answer
+    DeadlineExceeded, not a stale success — regression for the
+    dequeue-only deadline check, driven by an injected batch delay."""
+    from repro.serve import FaultPlan
+
+    plan = FaultPlan({
+        "pump.batch_delay": {"kind": "delay", "at": (0,), "delay": 0.05},
+    })
+    engine = GraphServeEngine(net, fault_plan=plan)
+    rid = engine.submit({"kind": "degree", "u": 3, "timeout": 0.02})
+    engine.pump()  # deadline is alive at dequeue, dead after the delay
+    r = engine.result(rid)
+    assert r.error is not None and "DeadlineExceeded" in r.error
+    assert "during dispatch" in r.error
+    assert engine.stats["deadline_expired"] == 1
+    # the computed value was still cached (valid for the key): the same
+    # request with budget to spare is a hit, not a recomputation
+    rid = engine.submit({"kind": "degree", "u": 3, "timeout": 30})
+    engine.pump()
+    r2 = engine.result(rid)
+    assert r2.error is None and r2.cached
+
+
+def test_generous_deadline_survives_batch_delay(net):
+    from repro.serve import FaultPlan
+
+    plan = FaultPlan({
+        "pump.batch_delay": {"kind": "delay", "at": (0,), "delay": 0.02},
+    })
+    engine = GraphServeEngine(net, fault_plan=plan)
+    rid = engine.submit({"kind": "degree", "u": 3, "timeout": 30})
+    engine.pump()
+    assert engine.result(rid).error is None
+    assert engine.stats["deadline_expired"] == 0
+
+
+# -- trailing-line handling (trace-replay satellite fix) ----------------------
+
+
+def test_parse_trace_final_line_without_newline_parses(net):
+    """A complete final record missing only its newline terminator must
+    be served, not silently dropped."""
+    text = ('{"kind": "degree", "u": 1}\n'
+            '{"kind": "degree", "u": 2}')  # no trailing \n
+    reqs = parse_trace(text)
+    assert [r["u"] for r in reqs] == [1, 2]
+
+
+def test_parse_trace_torn_final_line_raises_truncated(tmp_path):
+    from repro.core.io import TruncatedFileError
+    from repro.serve import load_trace
+
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"kind": "degree", "u": 1}\n{"kind": "degr')
+    with pytest.raises(TruncatedFileError, match="torn mid-write"):
+        load_trace(p)
+    # the same garbage MID-file is a plain malformed-line error, not a
+    # truncation (the writer terminated it — it was never torn)
+    with pytest.raises(ValueError, match="bad JSON"):
+        parse_trace('{"kind": "degr\n{"kind": "degree", "u": 1}\n')
+
+
+def test_cli_serve_trailing_partial_line(net, tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text('{"kind": "degree", "u": 1}\n{"kind": "degree", "u": 2}')
+    records, stats = api.serve(net, str(p))
+    assert len(records) == 2 and all("error" not in r for r in records)

@@ -37,6 +37,7 @@ RESULTS_SERVE: dict[str, float] = {}  # serving workload (BENCH_5.json)
 RESULTS_SERVE_MUT: dict[str, float] = {}  # mutating serve workload (BENCH_6.json)
 RESULTS_SCALE: dict[str, float] = {}  # 10M-node Table 1 workload (BENCH_7.json)
 RESULTS_SLO: dict[str, float] = {}  # open-loop serve tail latency (BENCH_8.json)
+RESULTS_SHARDED: dict[str, float] = {}  # sharded traversal scaling (BENCH_9.json)
 
 
 def emit(
@@ -150,6 +151,37 @@ def table1_scale() -> None:
         "rss_budget_bytes", "checkedge_us", "memberships_us", "alters_us",
     ):
         emit(f"table1_scale/{key}", float(data[key]), results=RESULTS_SCALE)
+
+
+def sharded_perf() -> None:
+    """Sharded khop/point-query scaling at 1/2/4/8 shards (BENCH_9.json).
+
+    Spawns benchmarks/sharded_perf.py as a child process: the 8-CPU-
+    device mesh needs ``--xla_force_host_platform_device_count`` set
+    before jax initializes, which this parent has already done. The
+    child asserts bit-identity against the unsharded engine for every
+    shard count before timing, and (full runs) enforces the >=2x khop
+    speedup at 4 shards itself; compare.py gates the tracked ratio.
+    """
+    import json
+    import subprocess
+    import sys
+    import tempfile
+    from pathlib import Path
+
+    script = Path(__file__).parent / "sharded_perf.py"
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td) / "sharded_perf.json"
+        cmd = [sys.executable, str(script), "--json", str(out)]
+        if SMOKE:
+            cmd.append("--smoke")
+        subprocess.run(cmd, check=True, env=env)
+        data = json.loads(out.read_text())
+    for key, val in sorted(data.items()):
+        emit(key, float(val), results=RESULTS_SHARDED)
 
 
 def query_perf(net) -> None:
@@ -909,6 +941,7 @@ def main() -> None:
     serve_perf(net)
     serve_perf_mutating(net)
     serve_slo_perf(net)
+    sharded_perf()
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
@@ -924,6 +957,7 @@ def main() -> None:
     print(f"# wrote {write_bench_json(RESULTS_SERVE_MUT, Path(__file__).parent / 'BENCH_6.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SCALE, Path(__file__).parent / 'BENCH_7.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SLO, Path(__file__).parent / 'BENCH_8.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_SHARDED, Path(__file__).parent / 'BENCH_9.json')}")
 
 
 if __name__ == "__main__":

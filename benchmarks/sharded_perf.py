@@ -1,0 +1,198 @@
+"""Sharded query + traversal throughput scaling (BENCH_9.json rows).
+
+The sharded engine's perf claim: on hub-skewed graphs, contiguous-range
+sharding turns one global degree cap into per-shard caps, so each hop's
+candidate matrix shrinks from ``B x F x cap_global`` to the sum of
+``B x F_s x cap_s`` — shards that own no hubs pay the background cap,
+not the hub cap — and shards expand concurrently. This script measures
+khop wall time at 1/2/4/8 shards on the same 8-CPU-device mesh the
+distributed tests force, on a graph whose hubs (and giant hyperedges)
+all live at low node ids, i.e. inside shard 0. Bit-identity against the
+unsharded engine is asserted in-run for every shard count before any
+timing is recorded.
+
+Run as a SCRIPT in its own process (the device-count flag must be set
+before jax initializes; benchmarks/run.py ``sharded_perf`` spawns this
+as a subprocess like table1_scale):
+
+    python benchmarks/sharded_perf.py --json /tmp/b9.json
+    python benchmarks/sharded_perf.py --smoke --json /tmp/b9s.json
+
+compare.py gates khop_1shard_us / khop_4shard_us (>= 2x tracked).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG
+    ).strip()
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def build_skewed_network(n_nodes: int, hub_degree: int, seed: int = 0):
+    """Background degree ~8 everywhere; 64 hubs of ``hub_degree`` and a
+    handful of giant hyperedges, all at low node ids (shard 0's range
+    under every shard count)."""
+    from repro.core import api
+    from repro.core.layers import (
+        one_mode_from_edges,
+        two_mode_from_memberships,
+    )
+
+    rng = np.random.default_rng(seed)
+    n_bg = 4 * n_nodes  # undirected -> mean degree ~8
+    src = [rng.integers(0, n_nodes, n_bg)]
+    dst = [rng.integers(0, n_nodes, n_bg)]
+    hubs = np.arange(64)
+    for h in hubs:
+        src.append(np.full(hub_degree, h))
+        dst.append(rng.integers(0, n_nodes, hub_degree))
+    net = api.createnetwork(n_nodes)
+    net = net.with_layer("ties", one_mode_from_edges(
+        n_nodes, np.concatenate(src), np.concatenate(dst), directed=False))
+    # giant hyperedges over low ids + small ones everywhere
+    nodes, hes = [], []
+    for g in range(8):
+        members = rng.integers(0, n_nodes // 8, hub_degree)
+        nodes.append(members)
+        hes.append(np.full(members.size, g))
+    for h in range(8, 200):
+        members = rng.integers(0, n_nodes, 12)
+        nodes.append(members)
+        hes.append(np.full(members.size, h))
+    net = net.with_layer("aff", two_mode_from_memberships(
+        n_nodes, 200, np.concatenate(nodes), np.concatenate(hes)))
+    return net
+
+
+def _timeit(fn, n_warmup: int, n_iter: int) -> float:
+    """Median wall µs per call (pulls results to host, like serving)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _assert_identical(ref, got, what: str) -> None:
+    for x, y in zip(ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=what
+        )
+
+
+def measure(n_nodes: int, hub_degree: int, smoke: bool) -> dict:
+    from repro.core.sharded import shard_network
+
+    out: dict = {"sharded/n_nodes": float(n_nodes),
+                 "sharded/hub_degree": float(hub_degree),
+                 "sharded/n_devices": float(len(jax.devices()))}
+    t0 = time.perf_counter()
+    net = build_skewed_network(n_nodes, hub_degree)
+    print(f"# built skewed net ({n_nodes:,} nodes, hub degree "
+          f"{hub_degree}) in {time.perf_counter() - t0:.1f}s",
+          file=sys.stderr)
+
+    rng = np.random.default_rng(1)
+    n_warmup, n_iter = (1, 2) if smoke else (2, 5)
+
+    # khop workload: sources in the background region; hop 1 reaches
+    # hubs through background edges, so the unsharded cap jumps to
+    # hub_degree for the whole frontier from hop 2 on. max_frontier is
+    # deliberately large relative to the hub count: frontier overflow
+    # keeps the smallest ids, and a tight cap would concentrate every
+    # hop inside shard 0's range — a wide frontier spans the id space,
+    # so hub-free shards own real segments at the background cap.
+    B = 16 if smoke else 32
+    k = 2 if smoke else 3
+    mf = 512 if smoke else 4096
+    sources = rng.integers(n_nodes // 8, n_nodes, B).astype(np.int32)
+    ref_khop = net.khop(sources, k, max_frontier=mf, layer_names=["ties"])
+
+    # point workload
+    P = 1024 if smoke else 8192
+    u = rng.integers(0, n_nodes, P).astype(np.int32)
+    v = rng.integers(0, n_nodes, P).astype(np.int32)
+    ref_point = (net.edge_value("ties", u, v), net.node_alters(u[:256], 64),
+                 net.degree(u))
+
+    for s in SHARD_COUNTS:
+        sn = shard_network(net, s) if s > 1 else net
+        got = sn.khop(sources, k, max_frontier=mf, layer_names=["ties"])
+        _assert_identical(ref_khop, got, f"khop @ {s} shards")
+        us = _timeit(
+            lambda sn=sn: sn.khop(sources, k, max_frontier=mf,
+                                  layer_names=["ties"]),
+            n_warmup, n_iter,
+        )
+        out[f"sharded/khop_{s}shard_us"] = us
+        print(f"sharded/khop_{s}shard_us,{us:.1f},B={B};k={k};mf={mf}")
+
+        got_point = (sn.edge_value("ties", u, v),
+                     sn.node_alters(u[:256], 64), sn.degree(u))
+        _assert_identical(ref_point[0:1], got_point[0:1], "edge_value")
+        _assert_identical(ref_point[1], got_point[1], "alters")
+        _assert_identical(ref_point[2:], got_point[2:], "degree")
+        for name, fn in (
+            ("getedge", lambda sn=sn: sn.edge_value("ties", u, v)),
+            ("alters", lambda sn=sn: sn.node_alters(u[:256], 64)),
+            ("degree", lambda sn=sn: sn.degree(u)),
+        ):
+            pus = _timeit(fn, n_warmup, n_iter)
+            out[f"sharded/{name}_{s}shard_us"] = pus
+            print(f"sharded/{name}_{s}shard_us,{pus:.1f},B={P}")
+
+    speedup = (out["sharded/khop_1shard_us"]
+               / out["sharded/khop_4shard_us"])
+    out["sharded/khop_4shard_speedup_x"] = round(speedup, 2)
+    print(f"# khop 4-shard speedup: {speedup:.2f}x", file=sys.stderr)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=120_000)
+    ap.add_argument("--hub-degree", type=int, default=800)
+    ap.add_argument("--smoke", action="store_true",
+                    help="24k nodes, hub degree 400 — identical shape")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail if khop 4-shard speedup falls below this "
+                    "(default: 2.0 full, none for smoke)")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args(argv)
+    n_nodes = 24_000 if args.smoke else args.nodes
+    hub_degree = 400 if args.smoke else args.hub_degree
+    min_speedup = args.min_speedup
+    if min_speedup is None and not args.smoke:
+        min_speedup = 2.0
+
+    out = measure(n_nodes, hub_degree, args.smoke)
+    print(json.dumps(out, indent=2, sort_keys=True))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    if min_speedup and out["sharded/khop_4shard_speedup_x"] < min_speedup:
+        print(f"FAIL: khop 4-shard speedup "
+              f"{out['sharded/khop_4shard_speedup_x']:.2f}x below "
+              f"{min_speedup:.1f}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

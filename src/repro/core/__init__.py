@@ -62,6 +62,14 @@ from .processing import (
     symmetrize,
 )
 from .projection import project_two_mode, projection_nbytes
+from .request import (
+    QueryRequest,
+    QueryResult,
+    merge_filter_kwargs,
+    run_queries,
+    run_query,
+)
+from .sharded import ShardedNetwork, shard_network
 from .traversal import (
     components_batched,
     ego_batch,
@@ -106,6 +114,9 @@ __all__ = [
     "dichotomize", "filter_edges", "induced_subnetwork", "subgraph_layer",
     "symmetrize",
     "project_two_mode", "projection_nbytes",
+    "QueryRequest", "QueryResult", "merge_filter_kwargs",
+    "run_query", "run_queries",
+    "ShardedNetwork", "shard_network",
     "components_batched", "ego_batch", "khop_neighborhood",
     "random_walk_batch",
     "ego_sample", "neighborhood_sample", "random_walk",

@@ -35,6 +35,7 @@ from .analysis import (
 )
 from .memory import memory_report
 from .processing import induced_subnetwork
+from .request import QueryRequest, merge_filter_kwargs, run_queries, run_query
 from .io import (
     export_layer_tsv,
     import_layer_tsv,
@@ -54,6 +55,8 @@ __all__ = [
     "getdegree", "degreedist", "getdensity", "countcomponents",
     # batched traversal
     "khop", "egosample", "walkbatch", "componentsfast",
+    # typed query currency (core/request.py) + one-shot execution
+    "QueryRequest", "runquery",
     # serving
     "serve", "servenet", "pingnet",
     # container surface
@@ -101,35 +104,71 @@ def generate(net: Network, name: str, type: str, seed: int = 0, **params) -> Net
     return net.with_layer(name, layer)
 
 
-def checkedge(net: Network, layer: str, u, v, node_filter=None):
+def checkedge(net: Network, layer: str, u, v, filter=None, node_filter=None):
     """Paper Listing 3: edge existence (pseudo-projected for 2-mode).
 
-    ``node_filter`` restricts targets: False whenever v fails the filter.
+    ``filter`` restricts targets: False whenever v fails the filter.
+    (``node_filter=`` is a deprecated alias.)
     """
+    filter = merge_filter_kwargs(filter, node_filter)
     out = net.check_edge_any(
-        jnp.asarray(u), jnp.asarray(v), [layer], node_filter=node_filter
+        jnp.asarray(u), jnp.asarray(v), [layer], node_filter=filter
     )
     return bool(out[0]) if out.shape == (1,) else out
 
 
-def getedge(net: Network, layer: str, u, v):
-    out = net.edge_value(layer, u, v)
-    return float(out[0]) if out.shape == (1,) else out
+def getedge(net: Network, layer: str, u, v, filter=None):
+    """Edge value (pseudo-projected co-membership count for 2-mode).
+
+    Builds one :class:`QueryRequest` per pair and runs them through the
+    shared request engine — the exact objects the CLI, serve engine, and
+    wire frontend dispatch, so the four surfaces cannot drift.
+    """
+    un = np.atleast_1d(np.asarray(u, dtype=np.int64))
+    vn = np.atleast_1d(np.asarray(v, dtype=np.int64))
+    un, vn = np.broadcast_arrays(un, vn)
+    vals = run_queries(net, [
+        QueryRequest.getedge(layer, int(a), int(b), filter=filter)
+        for a, b in zip(un, vn)
+    ])
+    if len(vals) == 1:
+        return float(vals[0])
+    return jnp.asarray(np.asarray(vals, dtype=np.float32))
 
 
 def getnodealters(
     net: Network, u, layernames: Sequence[str] | None = None,
-    max_alters: int = 4096, node_filter=None,
+    max_alters: int = 4096, filter=None, node_filter=None,
 ):
-    """Alters of u across layers; ``node_filter`` (NodeSelection / bool
-    mask) keeps only alters passing an attribute predicate — paper
-    Listing 3's register-analysis query."""
-    vals, mask = net.node_alters(
-        jnp.asarray(u), max_alters, layernames, node_filter=node_filter
-    )
-    if vals.ndim == 2 and vals.shape[0] == 1:
-        return jnp.asarray(vals[0][mask[0]])
-    return vals, mask
+    """Alters of u across layers; ``filter`` (NodeSelection / bool mask /
+    attr spec) keeps only alters passing an attribute predicate — paper
+    Listing 3's register-analysis query. (``node_filter=`` is a
+    deprecated alias.)
+
+    Routed through :class:`QueryRequest` per query node; the padded
+    batch form is reconstructed from the per-node sorted alter lists
+    (union rows are sorted-compact, so the reconstruction is
+    bit-identical to the direct ``Network.node_alters`` call).
+    """
+    filter = merge_filter_kwargs(filter, node_filter)
+    ids = np.atleast_1d(np.asarray(u, dtype=np.int64))
+    layers = None if layernames is None else list(layernames)
+    rows = run_queries(net, [
+        QueryRequest.alters(int(i), layers=layers, max_alters=int(max_alters),
+                            filter=filter)
+        for i in ids
+    ])
+    if ids.size == 1:
+        return jnp.asarray(np.asarray(rows[0], dtype=np.int32))
+    from .csr import SENTINEL
+
+    vals = np.full((ids.size, int(max_alters)), int(SENTINEL), np.int32)
+    mask = np.zeros((ids.size, int(max_alters)), bool)
+    for i, r in enumerate(rows):
+        r = np.asarray(r, dtype=np.int32)
+        vals[i, : r.size] = r
+        mask[i, : r.size] = True
+    return jnp.asarray(vals), jnp.asarray(mask)
 
 
 def shortestpath(
@@ -259,19 +298,30 @@ def attributesummary(net: Network, name: str) -> dict:
 
 
 def getdegree(
-    net: Network, u, layernames: Sequence[str] | None = None, node_filter=None
+    net: Network, u, layernames: Sequence[str] | None = None, filter=None,
+    node_filter=None,
 ):
-    """Per-node degree; with ``node_filter`` the filtered alter count
-    (see Network.degree)."""
-    out = net.degree(jnp.asarray(u), layernames, node_filter=node_filter)
-    return int(out[0]) if out.shape == (1,) else np.asarray(out)
+    """Per-node degree; with ``filter`` the filtered alter count (see
+    Network.degree). (``node_filter=`` is a deprecated alias.)"""
+    filter = merge_filter_kwargs(filter, node_filter)
+    ids = np.atleast_1d(np.asarray(u, dtype=np.int64))
+    layers = None if layernames is None else list(layernames)
+    out = run_query(net, QueryRequest.degree(
+        [int(i) for i in ids], layers=layers, filter=filter
+    ))
+    if ids.size == 1:
+        return int(out) if np.isscalar(out) or np.ndim(out) == 0 else int(out[0])
+    return np.asarray(out)
 
 
 def degreedist(
-    net: Network, layernames: Sequence[str] | None = None, node_filter=None
+    net: Network, layernames: Sequence[str] | None = None, filter=None,
+    node_filter=None,
 ) -> list[list[int]]:
-    """Degree histogram -> [[degree, count], ...] ascending (CLI table)."""
-    degs, counts = degree_distribution(net, layernames, node_filter=node_filter)
+    """Degree histogram -> [[degree, count], ...] ascending (CLI table).
+    (``node_filter=`` is a deprecated alias for ``filter=``.)"""
+    filter = merge_filter_kwargs(filter, node_filter)
+    degs, counts = degree_distribution(net, layernames, node_filter=filter)
     return [[int(d), int(c)] for d, c in zip(degs, counts)]
 
 
@@ -280,12 +330,15 @@ def getdensity(net: Network, layer: str) -> float:
 
 
 def countcomponents(
-    net: Network, layernames: Sequence[str] | None = None, node_filter=None
+    net: Network, layernames: Sequence[str] | None = None, filter=None,
+    node_filter=None,
 ) -> int:
-    """Component count; ``node_filter`` restricts to the induced selection
-    (filtered-out nodes count as singletons)."""
+    """Component count; ``filter`` restricts to the induced selection
+    (filtered-out nodes count as singletons). (``node_filter=`` is a
+    deprecated alias.)"""
+    filter = merge_filter_kwargs(filter, node_filter)
     labels = np.asarray(
-        connected_components(net, layernames, node_filter=node_filter)
+        connected_components(net, layernames, node_filter=filter)
     )
     return int(np.unique(labels).size)
 
@@ -298,34 +351,39 @@ def countcomponents(
 def khop(
     net: Network, sources, k: int,
     layernames: Sequence[str] | None = None,
-    max_frontier: int | None = None, node_filter=None,
+    max_frontier: int | None = None, filter=None, node_filter=None,
 ) -> list[dict]:
     """CLI ``khop``: k-hop neighborhoods for a batch of sources.
 
     Returns one record per source: ``{"source", "count", "nodes", "hops"}``
     with ``nodes`` the reached ids (source excluded) grouped by hop order
-    and ``hops`` the matching hop index per id.
+    and ``hops`` the matching hop index per id. Routed through
+    :class:`QueryRequest` — sharded targets (``ShardedNetwork``) run
+    per-shard frontier expansion, bit-identical to the single-device
+    path. (``node_filter=`` is a deprecated alias for ``filter=``.)
     """
-    from .traversal import khop_records
-
+    filter = merge_filter_kwargs(filter, node_filter)
     src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
-    nodes, mask, hop_of_slot = net.khop(
-        jnp.asarray(src, jnp.int32), int(k), max_frontier=max_frontier,
-        layer_names=layernames, node_filter=node_filter,
-    )
-    return khop_records(src, nodes, mask, hop_of_slot)
+    layers = None if layernames is None else list(layernames)
+    return run_query(net, QueryRequest.khop(
+        [int(s) for s in src], int(k), layers=layers,
+        max_frontier=None if max_frontier is None else int(max_frontier),
+        filter=filter,
+    ))
 
 
 def egosample(
     net: Network, egos, max_alters: int = 4096, k: int = 1,
-    layernames: Sequence[str] | None = None, node_filter=None,
+    layernames: Sequence[str] | None = None, filter=None, node_filter=None,
 ) -> list[list[int]]:
     """CLI ``egosample``: batched (k-hop) ego networks, one sorted-unique
-    alter list per ego (deduped — each alter appears once)."""
+    alter list per ego (deduped — each alter appears once).
+    (``node_filter=`` is a deprecated alias for ``filter=``.)"""
+    filter = merge_filter_kwargs(filter, node_filter)
     ids = np.atleast_1d(np.asarray(egos, dtype=np.int64))
     vals, mask = net.ego_batch(
         jnp.asarray(ids, jnp.int32), int(max_alters), k=int(k),
-        layer_names=layernames, node_filter=node_filter,
+        layer_names=layernames, node_filter=filter,
     )
     vals = np.asarray(vals)
     mask = np.asarray(mask)
@@ -335,32 +393,45 @@ def egosample(
 def walkbatch(
     net: Network, starts, steps: int, walkers: int = 1, seed: int = 0,
     layernames: Sequence[str] | None = None,
-    layer_weights: Sequence[float] | None = None, node_filter=None,
+    layer_weights: Sequence[float] | None = None, filter=None,
+    node_filter=None,
 ) -> list[list[int]]:
     """CLI ``walkbatch``: a walk fleet — ``walkers`` walkers per start
-    node, one path row each (see traversal.random_walk_batch)."""
-    from .traversal import random_walk_batch
-
-    paths = random_walk_batch(
-        net, jnp.asarray(np.atleast_1d(np.asarray(starts, np.int64)),
-                         jnp.int32),
-        int(steps), jax.random.PRNGKey(int(seed)),
-        walkers_per_start=int(walkers), layer_names=layernames,
-        layer_weights=layer_weights, node_filter=node_filter,
-    )
+    node, one path row each (see traversal.random_walk_batch). Routed
+    through :class:`QueryRequest` (the same jitted executor the serve
+    engine dispatches). (``node_filter=`` is a deprecated alias.)"""
+    filter = merge_filter_kwargs(filter, node_filter)
+    ids = np.atleast_1d(np.asarray(starts, np.int64))
+    layers = None if layernames is None else list(layernames)
+    paths = run_query(net, QueryRequest.walkbatch(
+        [int(s) for s in ids], int(steps), walkers=int(walkers),
+        seed=int(seed), layers=layers,
+        layer_weights=None if layer_weights is None else list(layer_weights),
+        filter=filter,
+    ))
     return np.asarray(paths).tolist()
 
 
 def componentsfast(
-    net: Network, layernames: Sequence[str] | None = None, node_filter=None
+    net: Network, layernames: Sequence[str] | None = None, filter=None,
+    node_filter=None,
 ) -> int:
     """CLI ``componentsfast``: filter-aware component count.
 
     ``connected_components`` itself now runs the pointer-jumping label
     propagation (traversal.components_batched), so this is
-    ``countcomponents`` plus the ``node_filter`` surface the legacy
+    ``countcomponents`` plus the ``filter`` surface the legacy
     ``components`` command predates."""
-    return countcomponents(net, layernames, node_filter=node_filter)
+    filter = merge_filter_kwargs(filter, node_filter)
+    return countcomponents(net, layernames, filter=filter)
+
+
+def runquery(net: Network, request):
+    """Execute one :class:`QueryRequest` (or trace-schema dict) against
+    ``net`` — the no-queue, no-cache reference path shared with the serve
+    engine's batched dispatch (results are bit-identical). ``net`` may
+    also be a ``ShardedNetwork`` (see ``core.sharded.shard_network``)."""
+    return run_query(net, QueryRequest.from_any(request))
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import numpy as np
 from . import api
 from .memory import memory_report
 from .nodeset import NodeSelection
+from .request import QueryRequest
 
 
 class CLIError(ValueError):
@@ -216,20 +217,24 @@ class Session:
     def _cmd_checkedge(self, net, layer, u, v, *, filter=None):
         return bool(api.checkedge(
             net, str(layer), int(u), int(v),
-            node_filter=self._node_filter(filter),
+            filter=self._node_filter(filter),
         )), None
 
-    def _cmd_getedge(self, net, layer, u, v):
-        return float(api.getedge(net, str(layer), int(u), int(v))), None
+    def _cmd_getedge(self, net, layer, u, v, *, filter=None):
+        # serve-kind commands build the same typed QueryRequest the api,
+        # serve engine, and wire frontend dispatch
+        req = QueryRequest.getedge(
+            str(layer), int(u), int(v), filter=self._node_filter(filter)
+        )
+        return float(api.runquery(net, req)), None
 
     def _cmd_getnodealters(self, net, u, *, layernames=None, max_alters=4096,
                            filter=None):
-        alters = api.getnodealters(
-            net, int(u), layernames=_names(layernames),
-            max_alters=int(max_alters),
-            node_filter=self._node_filter(filter),
+        req = QueryRequest.alters(
+            int(u), layers=_names(layernames), max_alters=int(max_alters),
+            filter=self._node_filter(filter),
         )
-        return np.asarray(alters).tolist(), None
+        return np.asarray(api.runquery(net, req)).tolist(), None
 
     def _cmd_shortestpath(self, net, u, v, *, layernames=None):
         return api.shortestpath(
@@ -331,16 +336,16 @@ class Session:
     # -- degree / structure ---------------------------------------------------
 
     def _cmd_getdegree(self, net, u, *, layernames=None, filter=None):
-        out = api.getdegree(
-            net, int(u), layernames=_names(layernames),
-            node_filter=self._node_filter(filter),
+        req = QueryRequest.degree(
+            int(u), layers=_names(layernames),
+            filter=self._node_filter(filter),
         )
-        return _jsonable(out), None
+        return _jsonable(api.runquery(net, req)), None
 
     def _cmd_degreedist(self, net, *, layernames=None, filter=None):
         dist = api.degreedist(
             net, layernames=_names(layernames),
-            node_filter=self._node_filter(filter),
+            filter=self._node_filter(filter),
         )
         if self.mode == "json":
             return dist, None
@@ -356,18 +361,20 @@ class Session:
 
     def _cmd_khop(self, net, nodes, *, k, layernames=None, maxfrontier=None,
                   filter=None):
-        return api.khop(
-            net, _ids(nodes), int(k), layernames=_names(layernames),
+        req = QueryRequest.khop(
+            [int(i) for i in _ids(nodes)], int(k),
+            layers=_names(layernames),
             max_frontier=None if maxfrontier is None else int(maxfrontier),
-            node_filter=self._node_filter(filter),
-        ), None
+            filter=self._node_filter(filter),
+        )
+        return api.runquery(net, req), None
 
     def _cmd_egosample(self, net, egos, *, max_alters=4096, k=1,
                        layernames=None, filter=None):
         return api.egosample(
             net, _ids(egos), max_alters=int(max_alters), k=int(k),
             layernames=_names(layernames),
-            node_filter=self._node_filter(filter),
+            filter=self._node_filter(filter),
         ), None
 
     def _cmd_walkbatch(self, net, starts, *, steps, walkers=1, seed=0,
@@ -380,16 +387,18 @@ class Session:
                     else [layerweights]
                 )
             ]
-        return api.walkbatch(
-            net, _ids(starts), steps=int(steps), walkers=int(walkers),
-            seed=int(seed), layernames=_names(layernames),
-            layer_weights=weights, node_filter=self._node_filter(filter),
-        ), None
+        req = QueryRequest.walkbatch(
+            [int(i) for i in _ids(starts)], int(steps),
+            walkers=int(walkers), seed=int(seed),
+            layers=_names(layernames), layer_weights=weights,
+            filter=self._node_filter(filter),
+        )
+        return np.asarray(api.runquery(net, req)).tolist(), None
 
     def _cmd_componentsfast(self, net, *, layernames=None, filter=None):
         return api.componentsfast(
             net, layernames=_names(layernames),
-            node_filter=self._node_filter(filter),
+            filter=self._node_filter(filter),
         ), None
 
     # -- serving (paper §3.1 threadleR deployment) ----------------------------

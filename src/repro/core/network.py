@@ -97,10 +97,12 @@ class Network:
         return self.layer(layer_name).check_edge(u, v)
 
     def edge_value(
-        self, layer_name: str, u: jnp.ndarray, v: jnp.ndarray
+        self, layer_name: str, u: jnp.ndarray, v: jnp.ndarray,
+        node_filter=None,
     ) -> jnp.ndarray:
         u, v = _as_batch(u), _as_batch(v)
-        return self.layer(layer_name).edge_value(u, v)
+        nf = node_filter_mask(node_filter, self.n_nodes)
+        return self.layer(layer_name).edge_value(u, v, node_filter=nf)
 
     def check_edge_any(
         self, u: jnp.ndarray, v: jnp.ndarray,

@@ -16,9 +16,32 @@ with an owner-computes pattern under ``shard_map``:
 This is the engine-side analogue of the framework's DP sharding: storage
 scales with devices, query latency stays one collective deep. Walk
 batches route the same way (sample locally, psum-select by owner).
+
+Two generations live here:
+
+* ``ShardedTwoMode`` + ``make_sharded_edge_value`` / ``make_sharded_
+  walk_step`` — the original shard_map kernels for ONE two-mode layer
+  (kept as-is; the 8-device tests pin them).
+* ``ShardedNetwork`` / ``shard_network`` — the full sharded query +
+  traversal engine: every layer's CSR row-sliced by contiguous node
+  ranges (global column ids, so no re-indexing on the query path),
+  owner-routed ``edge_value`` / ``node_alters`` / ``degree`` point
+  queries through the per-shard degree-bucketed dispatch, and khop /
+  components with per-shard frontier expansion + a cross-shard
+  frontier exchange between hops. Every result is bit-identical to
+  the single-device path: per-row point queries run the same bucketed
+  kernels on identical rows, the khop hop-union argument is the same
+  one that justifies slot-chunking in ``traversal.khop_neighborhood``
+  (the union of per-shard smallest new ids IS the hop's smallest
+  ``max_frontier`` new ids), and components converge to the unique
+  min-label fixed point regardless of sweep partitioning.
 """
 
 from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
 
 import numpy as np
 import jax
@@ -26,8 +49,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .csr import SENTINEL
-from .layers import LayerTwoMode
+from . import dispatch
+from .csr import CSR, SENTINEL
+from .layers import LayerOneMode, LayerTwoMode
+from .network import Network, _as_batch
+from .nodeset import node_filter_mask
 from .pytree import pytree_dataclass
 
 
@@ -195,3 +221,637 @@ def make_sharded_walk_step(graph: ShardedTwoMode, mesh: Mesh, axis: str = "data"
         )
 
     return walk_step
+
+
+# ---------------------------------------------------------------------------
+# ShardedNetwork: the full sharded query + traversal engine
+# ---------------------------------------------------------------------------
+#
+# Layout: each shard s owns the contiguous node range [bounds[s],
+# bounds[s+1]) and holds, per layer, a ROW-SLICED CSR — the indptr is
+# clamped so rows outside the range are empty, the indices keep their
+# GLOBAL column ids (no re-indexing), and the full row space is
+# preserved. An owned row is therefore byte-identical to the same row
+# in the unsharded layer, so the degree-bucketed dispatch runs on a
+# shard completely unchanged and per-row results are bit-identical by
+# construction. Two-mode layers replicate the hyperedge->member
+# directory (directory << membership data in the paper's regime) and
+# recompute the LOCAL max_memberships, which shrinks per-shard pad
+# widths without changing results.
+#
+# Cross-shard exchange is host-mediated: per-shard partial results are
+# pulled to host and combined there (scatter-back for point queries,
+# sorted union for khop frontiers, elementwise min for component
+# labels). With multiple local devices each shard's arrays are placed
+# on its own device, so per-shard dispatches overlap across a thread
+# pool; with one device the same code path still wins on hub-skewed
+# graphs because each shard's hop expansion pays its OWN alter bound
+# rather than the global hub bound (see sharded khop below).
+
+_POOL: ThreadPoolExecutor | None = None
+
+
+def _shard_pool() -> ThreadPoolExecutor:
+    # one process-wide pool shared by every ShardedNetwork (engines
+    # rebuild sharded views on mutation; per-instance pools would leak
+    # a thread set per rebuild)
+    global _POOL
+    if _POOL is None:
+        _POOL = ThreadPoolExecutor(
+            max_workers=min(16, (os.cpu_count() or 4)),
+            thread_name_prefix="shard-query",
+        )
+    return _POOL
+
+
+def _smap(fn, items: list):
+    """Map over per-shard work items, threaded when there are several.
+
+    jax releases the GIL during device execution, so per-shard
+    dispatches overlap; host-side planning interleaves.
+    """
+    if len(items) <= 1:
+        return [fn(x) for x in items]
+    return list(_shard_pool().map(fn, items))
+
+
+def _slice_csr_rows(csr: CSR, lo: int, hi: int) -> CSR:
+    """Row-range restriction: rows outside [lo, hi) become empty.
+
+    new_indptr[i] = clip(indptr[i], indptr[lo], indptr[hi]) - indptr[lo]
+    keeps the full row space (n_rows unchanged) while the indices /
+    values arrays shrink to the owned rows' nnz. Owned rows are
+    byte-identical to the source CSR's.
+    """
+    indptr = np.asarray(csr.indptr)
+    base, top = int(indptr[lo]), int(indptr[hi])
+    new_ptr = (np.clip(indptr.astype(np.int64), base, top) - base).astype(
+        indptr.dtype
+    )
+    return CSR(
+        indptr=jnp.asarray(new_ptr),
+        indices=csr.indices[base:top],
+        values=None if csr.values is None else csr.values[base:top],
+        n_rows=csr.n_rows,
+        n_cols=csr.n_cols,
+    )
+
+
+def _slice_layer(layer, lo: int, hi: int):
+    """One shard's view of a layer: owned rows only, global column ids."""
+    if isinstance(layer, LayerTwoMode):
+        memb = _slice_csr_rows(layer.memb, lo, hi)
+        local = np.asarray(layer.memb.indptr)[lo : hi + 1]
+        mm = int(np.diff(local).max()) if hi > lo else 0
+        return LayerTwoMode(
+            memb=memb,
+            members=layer.members,  # replicated hyperedge directory
+            max_memberships=max(mm, 1),
+            max_hyperedge_size=layer.max_hyperedge_size,
+        )
+    return LayerOneMode(
+        out=_slice_csr_rows(layer.out, lo, hi),
+        in_=None if layer.in_ is None else _slice_csr_rows(layer.in_, lo, hi),
+        directed=layer.directed,
+        valued=layer.valued,
+        allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )
+
+
+class ShardedNetwork:
+    """Per-shard row-sliced layer views + the owner-routing query engine.
+
+    Implements the Network query protocol (``edge_value`` /
+    ``check_edge_any`` / ``node_alters`` / ``degree`` / ``khop`` /
+    ``components``) with results bit-identical to ``source``'s
+    single-device paths, so the serve engine's executors and
+    ``api.runquery`` take either interchangeably. Traced inputs fall
+    back to ``source`` (owner routing needs concrete ids). ``source``
+    stays resident for walk fleets (batch-coupled RNG cannot shard
+    bit-identically) and layer/nodeset metadata.
+    """
+
+    def __init__(self, source: Network, shards: tuple, bounds: np.ndarray):
+        self.source = source
+        self.shards = tuple(shards)
+        self.bounds = np.asarray(bounds, dtype=np.int64)
+        self.n_shards = len(self.shards)
+
+    # -- container parity ----------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return self.source.n_nodes
+
+    @property
+    def nodeset(self):
+        return self.source.nodeset
+
+    @property
+    def layer_names(self) -> tuple[str, ...]:
+        return self.source.layer_names
+
+    def layer(self, name: str):
+        return self.source.layer(name)
+
+    def _select(self, layer_names):
+        return self.source._select(layer_names)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            sum(l.nbytes for l in sh.layers) for sh in self.shards
+        ) + self.source.nodeset.nbytes
+
+    def shard_of(self, ids: np.ndarray) -> np.ndarray:
+        """Owning shard per node id (contiguous-range partition)."""
+        own = np.searchsorted(self.bounds, ids, side="right") - 1
+        return np.clip(own, 0, self.n_shards - 1)
+
+    def _partition(self, ids: np.ndarray) -> list[tuple[int, np.ndarray]]:
+        """[(shard, positions-into-ids)] for the shards that own any."""
+        own = self.shard_of(ids)
+        return [
+            (s, np.nonzero(own == s)[0])
+            for s in range(self.n_shards)
+            if (own == s).any()
+        ]
+
+    # -- owner-routed point queries ------------------------------------------
+
+    def edge_value(self, layer_name: str, u, v, node_filter=None):
+        """Batched edge value, routed to owning shards.
+
+        One-mode rows live wholly on owner(u), so pairs route there and
+        run the shard's bucketed kernel on identical rows. Two-mode
+        pairs may STRADDLE shards: each endpoint's membership row is
+        gathered from its owner and the shared-hyperedge count is
+        computed at the coordinator by sorted intersection — the same
+        integer every single-device path produces.
+        """
+        u, v = _as_batch(u), _as_batch(v)
+        nf = node_filter_mask(node_filter, self.n_nodes)
+        layer = self.source.layer(layer_name)
+        if not dispatch.can_dispatch(u, v, nf):
+            return self.source.edge_value(
+                layer_name, u, v, node_filter=nf
+            )
+        un = np.asarray(u, np.int64)
+        vn = np.asarray(v, np.int64)
+        if isinstance(layer, LayerTwoMode):
+            a, am = self._member_rows(layer_name, un)
+            b, bm = self._member_rows(layer_name, vn)
+            from .csr import sorted_isin
+
+            hits = sorted_isin(
+                jnp.asarray(a), jnp.asarray(am),
+                jnp.asarray(b), jnp.asarray(bm),
+            )
+            val = jnp.sum(hits, axis=-1).astype(jnp.float32)
+            if nf is not None:
+                val = jnp.where(
+                    jnp.take(jnp.asarray(nf), v, mode="clip"), val, 0.0
+                )
+            return val
+        out = np.zeros(un.shape[0], np.float32)
+
+        def run(part):
+            s, idx = part
+            vals = self.shards[s].layer(layer_name).edge_value(
+                jnp.asarray(un[idx], jnp.int32),
+                jnp.asarray(vn[idx], jnp.int32),
+                node_filter=nf,
+            )
+            return idx, np.asarray(vals)
+
+        for idx, vals in _smap(run, self._partition(un)):
+            out[idx] = vals
+        return jnp.asarray(out)
+
+    def _member_rows(self, layer_name: str, ids: np.ndarray):
+        """Gather membership rows from owners, padded to a common width."""
+        parts = []
+
+        def run(part):
+            s, idx = part
+            lay = self.shards[s].layer(layer_name)
+            a, m = lay.memberships(jnp.asarray(ids[idx], jnp.int32))
+            return idx, np.asarray(a), np.asarray(m)
+
+        parts = _smap(run, self._partition(ids))
+        K = max([p[1].shape[1] for p in parts] or [1])
+        A = np.full((ids.shape[0], K), int(SENTINEL), np.int32)
+        M = np.zeros((ids.shape[0], K), bool)
+        for idx, a, m in parts:
+            A[idx, : a.shape[1]] = a
+            M[idx, : m.shape[1]] = m
+        return A, M
+
+    def check_edge_any(self, u, v, layer_names=None, node_filter=None):
+        """OR across selected layers (Network.check_edge_any parity)."""
+        u, v = _as_batch(u), _as_batch(v)
+        nf = node_filter_mask(node_filter, self.n_nodes)
+        if not dispatch.can_dispatch(u, v, nf):
+            return self.source.check_edge_any(
+                u, v, layer_names, node_filter=nf
+            )
+        names = (
+            self.layer_names if layer_names is None else tuple(layer_names)
+        )
+        un = np.asarray(u, np.int64)
+        vn = np.asarray(v, np.int64)
+        out = np.zeros(un.shape[0], bool)
+        for name in names:
+            layer = self.source.layer(name)
+            if isinstance(layer, LayerTwoMode):
+                out |= np.asarray(
+                    self.edge_value(name, u, v, node_filter=nf)
+                ) > 0
+                continue
+
+            def run(part, name=name):
+                s, idx = part
+                hit = self.shards[s].layer(name).check_edge(
+                    jnp.asarray(un[idx], jnp.int32),
+                    jnp.asarray(vn[idx], jnp.int32),
+                    node_filter=nf,
+                )
+                return idx, np.asarray(hit)
+
+            for idx, hit in _smap(run, self._partition(un)):
+                out[idx] |= hit
+        return jnp.asarray(out)
+
+    def node_alters(self, u, max_alters: int, layer_names=None,
+                    node_filter=None):
+        """Owner-routed multilayer alters union -> (vals, mask).
+
+        Rows are row-independent, so each shard answers the queried
+        nodes it owns through its own bucketed dispatch and results
+        scatter back — per-row bit-identical to the unsharded call.
+        """
+        u = _as_batch(u)
+        nf = node_filter_mask(node_filter, self.n_nodes)
+        if not dispatch.can_dispatch(u, nf):
+            return self.source.node_alters(
+                u, max_alters, layer_names, node_filter=nf
+            )
+        un = np.asarray(u, np.int64)
+        vals = np.full((un.shape[0], max_alters), int(SENTINEL), np.int32)
+        mask = np.zeros((un.shape[0], max_alters), bool)
+
+        def run(part):
+            s, idx = part
+            a, m = self.shards[s].node_alters(
+                jnp.asarray(un[idx], jnp.int32), max_alters, layer_names,
+                node_filter=nf,
+            )
+            return idx, np.asarray(a), np.asarray(m)
+
+        for idx, a, m in _smap(run, self._partition(un)):
+            vals[idx] = a
+            mask[idx] = m
+        return jnp.asarray(vals), jnp.asarray(mask)
+
+    def degree(self, u, layer_names=None, node_filter=None):
+        """Owner-routed summed per-layer degree (Network.degree parity)."""
+        u = _as_batch(u)
+        nf = node_filter_mask(node_filter, self.n_nodes)
+        if not dispatch.can_dispatch(u, nf):
+            return self.source.degree(u, layer_names, node_filter=nf)
+        un = np.asarray(u, np.int64)
+        out = np.zeros(un.shape[0], np.int32)
+
+        def run(part):
+            s, idx = part
+            d = self.shards[s].degree(
+                jnp.asarray(un[idx], jnp.int32), layer_names,
+                node_filter=nf,
+            )
+            return idx, np.asarray(d)
+
+        for idx, d in _smap(run, self._partition(un)):
+            out[idx] = d
+        return jnp.asarray(out)
+
+    # -- sharded traversal ---------------------------------------------------
+
+    def khop(self, sources, k: int, *, max_frontier: int | None = None,
+             max_alters_per_node: int | None = None, layer_names=None,
+             node_filter=None, use_pallas: bool | None = None,
+             interpret: bool | None = None):
+        return sharded_khop(
+            self, sources, k, max_frontier=max_frontier,
+            max_alters_per_node=max_alters_per_node,
+            layer_names=layer_names, node_filter=node_filter,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    def components(self, layer_names=None, node_filter=None,
+                   max_sweeps: int | None = None):
+        return sharded_components(
+            self, layer_names=layer_names, node_filter=node_filter,
+            max_sweeps=max_sweeps,
+        )
+
+
+def shard_network(
+    net: Network, n_shards: int, devices: Sequence | None = None,
+) -> ShardedNetwork:
+    """Partition every layer of ``net`` by contiguous node ranges.
+
+    ``devices=None`` places shard s on ``jax.local_devices()[s % D]``
+    when more than one local device exists (the 8-device CPU mesh the
+    distributed tests force), and skips placement on a single device.
+    Pass an explicit device list to pin, or ``devices=()`` to disable.
+    """
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n = net.n_nodes
+    n_shards = min(n_shards, max(n, 1))
+    bounds = np.array(
+        [(n * s) // n_shards for s in range(n_shards + 1)], np.int64
+    )
+    if devices is None:
+        devs = jax.local_devices()
+        devices = devs if len(devs) > 1 else ()
+    shards = []
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        sub = Network(
+            nodeset=net.nodeset,
+            layers=tuple(_slice_layer(l, lo, hi) for l in net.layers),
+            layer_names=net.layer_names,
+        )
+        if len(devices):
+            sub = jax.device_put(sub, devices[s % len(devices)])
+        shards.append(sub)
+    return ShardedNetwork(net, tuple(shards), bounds)
+
+
+def sharded_khop(
+    snet: ShardedNetwork,
+    sources,
+    k: int,
+    *,
+    max_frontier: int | None = None,
+    max_alters_per_node: int | None = None,
+    layer_names=None,
+    node_filter=None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Per-shard frontier expansion with a cross-shard hop exchange.
+
+    Mirrors ``traversal.khop_neighborhood`` hop for hop. Frontier rows
+    are sorted with SENTINEL pads, and shard ranges are contiguous, so
+    each row's shard-s nodes form one contiguous segment (found by two
+    vectorized rank counts — the "shard map" lookup). Per hop, each
+    shard compacts its owned frontier segment, expands it through its
+    OWN bucketed dispatch under its OWN exact alter bound, and compacts
+    candidates against the hop's shared visited set; the per-shard
+    partial frontiers then merge through ``union_rows`` — the halo/
+    frontier exchange.
+
+    Bit-identity: a per-shard compact keeps its partial's smallest new
+    ids, and the union of per-shard smallest ids IS the hop's smallest
+    ``max_frontier`` new ids — the same argument that justifies slot-
+    chunking inside the single-device loop, with shard segments as the
+    chunks. Beyond device parallelism this is an algorithmic win on
+    hub-skewed graphs: the hop cost is B·Σ_s F_s·cap_s (each shard pays
+    its local alter bound) instead of B·F·cap_global (every slot paying
+    the hub's bound).
+    """
+    from repro.kernels import ops as kops
+    from .csr import on_tpu as _on_tpu
+    from .traversal import (
+        DEFAULT_MAX_FRONTIER, MAX_CAND_FLAT, _frontier_alters,
+    )
+
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    src = jnp.asarray(sources, dtype=jnp.int32)
+    if src.ndim == 0:
+        src = src[None]
+    if src.ndim != 1:
+        raise ValueError(f"sources must be a vector, got shape {src.shape}")
+    if not dispatch.can_dispatch(src):
+        # owner routing needs concrete ids; traced callers take the
+        # single-device path (same results by the bit-identity contract)
+        return snet.source.khop(
+            src, k, max_frontier=max_frontier,
+            max_alters_per_node=max_alters_per_node,
+            layer_names=layer_names, node_filter=node_filter,
+        )
+    B = src.shape[0]
+    n = snet.n_nodes
+    nf = node_filter_mask(node_filter, n)
+    if max_frontier is None:
+        max_frontier = min(n, DEFAULT_MAX_FRONTIER)
+    max_frontier = max(int(max_frontier), 1)
+
+    hop_of_slot = np.concatenate(
+        [np.zeros(1, np.int32)]
+        + [np.full(max_frontier, h, np.int32) for h in range(1, k + 1)]
+    )
+
+    visited = src[:, None]
+    frontier = src[:, None]
+    groups = [src[:, None]]
+    masks = [jnp.ones((B, 1), bool)]
+    done_at = k
+    rows_b = np.arange(B)[:, None]
+    for h in range(1, k + 1):
+        f_np = np.asarray(frontier)
+        F = f_np.shape[1]
+        visited_hop = jnp.sort(visited, axis=-1)
+
+        # carve each row's owned segment per shard: rows are sorted with
+        # SENTINEL (> any node id) padding, so entries in [lo, hi) sit at
+        # positions [rank(lo), rank(hi)) — two counts per row, no sort
+        tasks = []
+        for s in range(snet.n_shards):
+            lo, hi = int(snet.bounds[s]), int(snet.bounds[s + 1])
+            left = (f_np < lo).sum(axis=1)
+            right = (f_np < hi).sum(axis=1)
+            widths = right - left
+            fs_w = int(widths.max())
+            if fs_w == 0:
+                continue
+            Fs = 1
+            while Fs < fs_w:  # pow2 width for compile-count stability
+                Fs <<= 1
+            cols = left[:, None] + np.arange(Fs)[None, :]
+            valid = np.arange(Fs)[None, :] < widths[:, None]
+            seg = np.where(
+                valid, f_np[rows_b, np.minimum(cols, F - 1)], int(SENTINEL)
+            ).astype(np.int32)
+            tasks.append((s, seg))
+
+        def expand(task):
+            s, seg = task
+            shard = snet.shards[s]
+            if max_alters_per_node is not None:
+                cap = max(int(max_alters_per_node), 1)
+            else:
+                real = np.unique(seg[seg != int(SENTINEL)].astype(np.int64))
+                cap = dispatch.alters_bound(
+                    shard._select(layer_names), real, n
+                )
+            Fs = seg.shape[1]
+            step = max(1, min(Fs, MAX_CAND_FLAT // cap))
+            seg_j = jnp.asarray(seg)
+            parts, pmasks = [], []
+            for lo2 in range(0, Fs, step):
+                cand = _frontier_alters(
+                    shard, seg_j[:, lo2 : lo2 + step], layer_names, nf, cap
+                )
+                pallas_here = (
+                    use_pallas
+                    if use_pallas is not None
+                    else (
+                        _on_tpu()
+                        and cand.shape[-1] <= dispatch.UNION_PALLAS_MAX_FLAT
+                    )
+                )
+                pv, pm = kops.frontier_compact(
+                    cand, visited_hop, max_frontier,
+                    use_pallas=pallas_here, interpret=interpret,
+                    visited_sorted=True,
+                )
+                parts.append(pv)
+                pmasks.append(pm)
+            if len(parts) > 1:
+                pv, pm = dispatch.union_rows(
+                    jnp.concatenate(parts, axis=-1),
+                    jnp.concatenate(pmasks, axis=-1),
+                    max_frontier,
+                    use_pallas=use_pallas, interpret=interpret,
+                )
+            else:
+                pv, pm = parts[0], pmasks[0]
+            # host pull = the frontier exchange (shards may sit on
+            # different devices; the union below runs at the coordinator)
+            return np.asarray(pv), np.asarray(pm)
+
+        partials = _smap(expand, tasks)
+        if not partials:
+            frontier = jnp.full((B, max_frontier), SENTINEL, jnp.int32)
+            fmask = jnp.zeros((B, max_frontier), bool)
+        elif len(partials) == 1:
+            frontier = jnp.asarray(partials[0][0])
+            fmask = jnp.asarray(partials[0][1])
+        else:
+            frontier, fmask = dispatch.union_rows(
+                jnp.asarray(np.concatenate([p[0] for p in partials], axis=1)),
+                jnp.asarray(np.concatenate([p[1] for p in partials], axis=1)),
+                max_frontier,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+        groups.append(frontier)
+        masks.append(fmask)
+        visited = jnp.concatenate([visited, frontier], axis=-1)
+        if not bool(jnp.any(fmask)):
+            done_at = h
+            break
+    pad = (k - done_at) * max_frontier
+    nodes = jnp.concatenate(groups, axis=-1)
+    mask = jnp.concatenate(masks, axis=-1)
+    if pad:
+        nodes = jnp.pad(nodes, ((0, 0), (0, pad)), constant_values=SENTINEL)
+        mask = jnp.pad(mask, ((0, 0), (0, pad)), constant_values=False)
+    return nodes, mask, jnp.asarray(hop_of_slot)
+
+
+def sharded_components(
+    snet: ShardedNetwork,
+    layer_names=None,
+    node_filter=None,
+    max_sweeps: int | None = None,
+):
+    """Connected components over the sharded views -> int32[n] labels.
+
+    Each round runs one min-label sweep PER SHARD over its owned rows
+    (two-mode sweeps go through the replicated hyperedge directory),
+    min-combines the per-shard proposals at the coordinator, applies
+    one pointer-jumping pass, and repeats to the fixed point. The
+    converged labeling (min node id per component; filtered-out nodes
+    keep their own id) is the unique fixed point of min-label
+    propagation, so it is bit-identical to ``components_batched``
+    regardless of how sweeps were partitioned or ordered.
+    """
+    from .csr import csr_row_ids
+    from .traversal import _INF
+
+    n = snet.n_nodes
+    nf = node_filter_mask(node_filter, n)
+    nfj = None if nf is None else jnp.asarray(nf)
+
+    shard_prep = []
+    for shard in snet.shards:
+        prep = []
+        for layer in shard._select(layer_names):
+            if isinstance(layer, LayerTwoMode):
+                if layer.memb.nnz:
+                    prep.append((layer, csr_row_ids(layer.memb),
+                                 csr_row_ids(layer.members)))
+            elif layer.out.nnz:
+                prep.append((layer, csr_row_ids(layer.out), None))
+        if prep:
+            shard_prep.append(prep)
+
+    labels = jnp.arange(n, dtype=jnp.int32)
+    if not shard_prep:
+        return labels
+
+    def sweep(prep, labels):
+        # one shard's propagation pass — the traversal.components_batched
+        # sweep body over this shard's row-sliced CSRs
+        for layer, rows, hrows in prep:
+            if hrows is None:
+                csr = layer.out
+                src_lab = jnp.take(labels, rows)
+                dst_lab = jnp.take(labels, csr.indices)
+                if nfj is not None:
+                    live = (
+                        jnp.take(nfj, rows)
+                        & jnp.take(nfj, csr.indices, mode="clip")
+                    )
+                    src_lab = jnp.where(live, src_lab, _INF)
+                    dst_lab = jnp.where(live, dst_lab, _INF)
+                labels = labels.at[csr.indices].min(src_lab)
+                labels = labels.at[rows].min(dst_lab)
+            else:
+                mem_lab = jnp.take(labels, layer.members.indices)
+                if nfj is not None:
+                    mem_lab = jnp.where(
+                        jnp.take(nfj, layer.members.indices, mode="clip"),
+                        mem_lab, _INF,
+                    )
+                he = jnp.full((layer.n_hyperedges,), _INF, dtype=jnp.int32)
+                he = he.at[hrows].min(mem_lab)
+                node_min = jnp.take(he, layer.memb.indices)
+                if nfj is not None:
+                    node_min = jnp.where(
+                        jnp.take(nfj, rows, mode="clip"), node_min, _INF
+                    )
+                labels = labels.at[rows].min(node_min)
+        return labels
+
+    limit = n if max_sweeps is None else int(max_sweeps)
+    lab_np = np.asarray(labels)
+    for _ in range(max(limit, 1)):
+        cur = jnp.asarray(lab_np)
+        parts = _smap(lambda p: np.asarray(sweep(p, cur)), shard_prep)
+        new_np = lab_np
+        for p in parts:  # coordinator min-combine (host exchange)
+            new_np = np.minimum(new_np, p)
+        jumped = jnp.asarray(new_np)
+        jumped = jnp.minimum(jumped, jnp.take(jumped, jumped))
+        new_np = np.asarray(jumped)
+        if np.array_equal(new_np, lab_np):
+            break
+        lab_np = new_np
+    return jnp.asarray(lab_np)

@@ -9,6 +9,8 @@ transport + HTTP health probes), ``client.py`` (retrying client),
 engine that used to live here moved to ``repro.models.lm_serve``.
 """
 
+from repro.core.request import QueryRequest
+
 from .client import GraphServeClient, ServeError, Unavailable
 from .faults import ConnectionDropped, FaultPlan, FaultSpec, InjectedFault
 from .frontend import GraphServeFrontend
@@ -51,6 +53,7 @@ __all__ = [
     "GraphServeFrontend",
     "IdempotencyCache",
     "InjectedFault",
+    "QueryRequest",
     "QueryResult",
     "QueueFull",
     "RetryPolicy",

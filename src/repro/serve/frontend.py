@@ -61,6 +61,10 @@ import socketserver
 import threading
 import time
 
+import re
+
+from repro.core.request import QueryRequest
+
 from .faults import ConnectionDropped
 from .graph_engine import EngineClosed, GraphServeEngine, QueueFull
 from .resilience import (
@@ -96,6 +100,34 @@ def _err(rid, code: str, error: str, retry_after: float | None = None) -> dict:
     if retry_after is not None:
         out["retry_after"] = retry_after
     return out
+
+
+_ID_INT = re.compile(r'"id"\s*:\s*(-?\d+)')
+_ID_STR = re.compile(r'"id"\s*:\s*"((?:[^"\\]|\\.)*)"')
+
+
+def _salvage_id(text: str):
+    """Best-effort request id from an UNPARSEABLE envelope line.
+
+    A client that sent malformed JSON still usually produced a readable
+    ``"id": ...`` pair; echoing it lets the client correlate the
+    ``bad_request`` reply with its in-flight retry state instead of
+    treating the reply as an unsolicited error. Returns None when no id
+    is recognizable (nothing to correlate).
+    """
+    m = _ID_INT.search(text)
+    if m:
+        try:
+            return int(m.group(1))
+        except ValueError:  # pragma: no cover - \d+ always parses
+            return None
+    m = _ID_STR.search(text)
+    if m:
+        try:
+            return json.loads('"' + m.group(1) + '"')
+        except ValueError:
+            return m.group(1)
+    return None
 
 
 class _Handler(socketserver.StreamRequestHandler):
@@ -176,7 +208,10 @@ class _Handler(socketserver.StreamRequestHandler):
             if not isinstance(env, dict):
                 raise ValueError("envelope must be a JSON object")
         except ValueError as e:
-            self._reply(fe, _err(None, "bad_request", f"bad envelope: {e}"))
+            # echo the request id when one is recognizable in the broken
+            # line, so clients can correlate the error to their retry
+            self._reply(fe, _err(_salvage_id(text), "bad_request",
+                                 f"bad envelope: {e}"))
             return
         resp = fe._dispatch(sid, env)
         if resp is not None:
@@ -415,7 +450,10 @@ class GraphServeFrontend:
             request = dict(request)
             request["timeout"] = max(deadline - time.monotonic(), 1e-4)
         try:
-            qid = self.engine.submit(request)
+            # the wire envelope's request object becomes the same typed
+            # QueryRequest the api/CLI/engine construct — one currency,
+            # validated once, across all four surfaces
+            qid = self.engine.submit(QueryRequest.from_dict(request))
         except QueueFull:
             self.admission.record_shed()
             self._count("shed")

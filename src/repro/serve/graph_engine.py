@@ -69,19 +69,11 @@ submits + pumps synchronously.
 
 from __future__ import annotations
 
-import functools
-import hashlib
 import threading
 import time
 from collections import OrderedDict, deque
-from dataclasses import dataclass, field
-from typing import Any, Iterable
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.core.nodeset import node_filter_mask
+from dataclasses import dataclass
+from typing import Iterable
 
 __all__ = [
     "GraphServeEngine",
@@ -98,11 +90,27 @@ __all__ = [
     "load_trace",
 ]
 
-POINT_KINDS = ("getedge", "alters", "degree")
-HEAVY_KINDS = ("khop", "walkbatch")
-REQUEST_KINDS = POINT_KINDS + HEAVY_KINDS
-
-_DEFAULT_MAX_ALTERS = 4096
+# Canonicalization, fingerprinting, executors and the per-call reference
+# path live in ``core/request.py`` (the QueryRequest currency shared by
+# api / CLI / engine / wire). The engine re-exports the serving-contract
+# names so existing imports (tests monkeypatch ``_EXECUTORS`` here) keep
+# resolving to the SAME objects.
+from repro.core.request import (  # noqa: F401  (re-exported serving API)
+    ALL_LAYERS_SCOPE,
+    HEAVY_KINDS,
+    POINT_KINDS,
+    REQUEST_KINDS,
+    _DEFAULT_MAX_ALTERS,
+    _EXECUTORS,
+    CanonicalRequest as _CanonRequest,
+    QueryRequest,
+    QueryResult,
+    _pythonic,
+    assert_results_equal,
+    canonical_request,
+    run_request,
+)
+from repro.core.sharded import shard_network
 
 
 class QueueFull(RuntimeError):
@@ -112,367 +120,6 @@ class QueueFull(RuntimeError):
 class EngineClosed(RuntimeError):
     """The engine was ``close()``d: late submissions/mutations rejected."""
 
-
-@dataclass
-class QueryResult:
-    """One served result.
-
-    ``value`` may be SHARED with other requests (LRU hits and coalesced
-    duplicates return the stored object, not a copy) — treat it as
-    read-only; mutating it in place would corrupt what later cache hits
-    receive. ``to_record()`` materializes an independent JSON-safe copy.
-    """
-
-    rid: int
-    kind: str
-    value: Any
-    cached: bool = False
-    error: str | None = None
-
-    def to_record(self) -> dict:
-        rec = {"id": self.rid, "kind": self.kind, "cached": self.cached}
-        if self.error is not None:
-            rec["error"] = self.error
-        else:
-            rec["result"] = _pythonic(self.value)
-        return rec
-
-
-def _pythonic(v):
-    """Canonical result -> JSON-friendly python (lists / scalars).
-
-    Sibling of ``core/cli.py::_jsonable`` (which additionally maps
-    engine-object types like NodeSelection that never appear in
-    canonical serve results)."""
-    if isinstance(v, np.ndarray):
-        return v.tolist()
-    if isinstance(v, np.bool_):
-        return bool(v)
-    if isinstance(v, (np.integer,)):
-        return int(v)
-    if isinstance(v, (np.floating,)):
-        return float(v)
-    if isinstance(v, dict):
-        return {k: _pythonic(x) for k, x in v.items()}
-    if isinstance(v, (list, tuple)):
-        return [_pythonic(x) for x in v]
-    return v
-
-
-# ---------------------------------------------------------------------------
-# Request canonicalization
-# ---------------------------------------------------------------------------
-
-
-def _canon_ids(x, *, what: str) -> tuple[int, ...]:
-    """Scalar id or id-list -> tuple of ints (the canonical batch form)."""
-    if isinstance(x, (list, tuple, np.ndarray)):
-        ids = tuple(int(i) for i in np.asarray(x).reshape(-1))
-        if not ids:
-            raise ValueError(f"{what} must not be empty")
-        return ids
-    return (int(x),)
-
-
-def _canon_layers(net, layers) -> tuple[str, ...] | None:
-    if layers is None:
-        return None
-    names = tuple(
-        str(n) for n in (layers if isinstance(layers, (list, tuple)) else [layers])
-    )
-    for n in names:
-        net.layer(n)  # raises KeyError on unknown layers at submit time
-    return names
-
-
-def _filter_fingerprint(mask: np.ndarray | None) -> str | None:
-    """Stable content hash of a filter mask (cache-key component)."""
-    if mask is None:
-        return None
-    return hashlib.blake2b(mask.tobytes(), digest_size=16).hexdigest()
-
-
-def _spec_memo_key(spec) -> tuple | None:
-    """Hashable memo key for a dict filter spec; None = not memoizable."""
-    if isinstance(spec, dict):
-        return (
-            "attrspec", str(spec.get("attr")), str(spec.get("op")),
-            spec.get("value"),
-        )
-    return None
-
-
-_FILTER_MEMO_MAX = 256
-
-
-def _resolve_filter(net, spec, memo: dict | None = None, gen: int = 0):
-    """Filter spec -> (bool mask ndarray | None, fingerprint | None).
-
-    Resolving a dict spec walks the attribute store and hashes an
-    O(n_nodes) mask — too much host work to repeat per request on the
-    serve hot path, so the engine passes a ``memo`` dict keyed on the
-    spec. Entries are tagged with the engine generation ``gen`` they
-    were resolved under: a mutation bumps the generation, so a mask
-    memoized concurrently with (or before) the mutation can never
-    satisfy a post-mutation lookup.
-    """
-    if spec is None:
-        return None, None
-    key = _spec_memo_key(spec) if memo is not None else None
-    if key is not None:
-        try:
-            hit = memo.get(key)
-        except TypeError:  # unhashable value in the spec: skip the memo
-            key = None
-        else:
-            if hit is not None and hit[0] == gen:
-                return hit[1], hit[2]
-    if isinstance(spec, dict):
-        sel = net.nodeset.select(
-            str(spec["attr"]), str(spec["op"]), spec.get("value")
-        )
-        mask = sel.mask
-    else:
-        mask = np.asarray(node_filter_mask(spec, net.n_nodes), dtype=bool)
-    fp = _filter_fingerprint(mask)
-    if key is not None:
-        if len(memo) >= _FILTER_MEMO_MAX:
-            memo.clear()
-        memo[key] = (gen, mask, fp)
-    return mask, fp
-
-
-#: scope token for results that read every layer (layers=None requests);
-#: any layer mutation invalidates these
-ALL_LAYERS_SCOPE = "layers*"
-
-
-def _layer_scopes(layers: tuple[str, ...] | None) -> frozenset[str]:
-    """Cache-dependency tokens for a request's layer selection."""
-    if layers is None:
-        return frozenset((ALL_LAYERS_SCOPE,))
-    return frozenset(f"layer:{n}" for n in layers)
-
-
-@dataclass(frozen=True)
-class _CanonRequest:
-    """A request after canonicalization: hashable keys + dispatch args."""
-
-    kind: str
-    group_key: tuple        # static args shared by a coalescible batch
-    cache_key: tuple        # group_key + per-request args
-    ids: tuple[int, ...]    # the batchable id payload (u / sources / ...)
-    ids2: tuple[int, ...]   # second id payload (getedge v), else ()
-    mask: np.ndarray | None = field(compare=False, hash=False, default=None)
-    # layers this request's result is computed from (scoped invalidation);
-    # derived from group_key so it is excluded from equality/hash
-    scopes: frozenset = field(compare=False, hash=False,
-                              default=frozenset((ALL_LAYERS_SCOPE,)))
-
-
-def canonical_request(
-    net, req: dict, *, _filter_memo: dict | None = None, _gen: int = 0,
-) -> _CanonRequest:
-    """Validate + canonicalize one request dict against ``net``.
-
-    Raises ``ValueError`` / ``KeyError`` on malformed requests — the
-    engine converts those to per-request error results so one bad client
-    cannot poison a batch. ``_filter_memo`` / ``_gen`` are the engine's
-    per-generation filter-resolution memo (see ``_resolve_filter``); the
-    per-call reference path (``run_request``) leaves them unset.
-    """
-    kind = str(req.get("kind", ""))
-    if kind not in REQUEST_KINDS:
-        raise ValueError(
-            f"unknown request kind {kind!r}; have {REQUEST_KINDS}"
-        )
-    mask, fp = _resolve_filter(net, req.get("filter"), _filter_memo, _gen)
-
-    if kind == "getedge":
-        layer = str(req["layer"])
-        net.layer(layer)
-        u, v = (int(req["u"]),), (int(req["v"]),)
-        gk = (kind, layer, fp)
-        return _CanonRequest(kind, gk, gk + (u, v), u, v, mask,
-                             scopes=frozenset((f"layer:{layer}",)))
-
-    if kind == "alters":
-        layers = _canon_layers(net, req.get("layers"))
-        m = int(req.get("max_alters", _DEFAULT_MAX_ALTERS))
-        if m < 1:
-            raise ValueError(f"max_alters must be >= 1, got {m}")
-        u = (int(req["u"]),)
-        gk = (kind, layers, m, fp)
-        return _CanonRequest(kind, gk, gk + (u,), u, (), mask,
-                             scopes=_layer_scopes(layers))
-
-    if kind == "degree":
-        layers = _canon_layers(net, req.get("layers"))
-        u = _canon_ids(req["u"], what="u")
-        gk = (kind, layers, fp)
-        return _CanonRequest(kind, gk, gk + (u,), u, (), mask,
-                             scopes=_layer_scopes(layers))
-
-    if kind == "khop":
-        layers = _canon_layers(net, req.get("layers"))
-        k = int(req["k"])
-        if k < 0:
-            raise ValueError(f"k must be >= 0, got {k}")
-        mf = req.get("max_frontier")
-        mf = None if mf is None else int(mf)
-        src = _canon_ids(req["sources"], what="sources")
-        gk = (kind, layers, k, mf, fp)
-        return _CanonRequest(kind, gk, gk + (src,), src, (), mask,
-                             scopes=_layer_scopes(layers))
-
-    # walkbatch — RNG state couples rows across a batch, so each distinct
-    # request is its own dispatch group (identical requests still dedup
-    # through the cache); results stay bit-identical to the per-call loop.
-    layers = _canon_layers(net, req.get("layers"))
-    steps = int(req["steps"])
-    if steps < 0:
-        raise ValueError(f"steps must be >= 0, got {steps}")
-    walkers = int(req.get("walkers", 1))
-    seed = int(req.get("seed", 0))
-    weights = req.get("layer_weights")
-    weights = (
-        None if weights is None
-        else tuple(float(w) for w in np.atleast_1d(weights))
-    )
-    starts = _canon_ids(req["starts"], what="starts")
-    gk = (kind, layers, steps, walkers, seed, weights, fp, starts)
-    return _CanonRequest(kind, gk, gk, starts, (), mask,
-                         scopes=_layer_scopes(layers))
-
-
-# ---------------------------------------------------------------------------
-# Batched group executors (one device dispatch per coalesced group)
-# ---------------------------------------------------------------------------
-
-
-def _exec_getedge(net, group_key, creqs):
-    _, layer_name, _ = group_key
-    layer = net.layer(layer_name)
-    u = jnp.asarray([c.ids[0] for c in creqs], jnp.int32)
-    v = jnp.asarray([c.ids2[0] for c in creqs], jnp.int32)
-    nf = creqs[0].mask
-    vals = np.asarray(layer.edge_value(u, v, node_filter=nf))
-    return [float(vals[i]) for i in range(len(creqs))]
-
-
-def _exec_alters(net, group_key, creqs):
-    _, layers, max_alters, _ = group_key
-    u = jnp.asarray([c.ids[0] for c in creqs], jnp.int32)
-    vals, mask = net.node_alters(
-        u, max_alters, layers, node_filter=creqs[0].mask
-    )
-    vals, mask = np.asarray(vals), np.asarray(mask)
-    return [vals[i][mask[i]] for i in range(len(creqs))]
-
-
-def _exec_degree(net, group_key, creqs):
-    _, layers, _ = group_key
-    flat = [i for c in creqs for i in c.ids]
-    out = np.asarray(net.degree(
-        jnp.asarray(flat, jnp.int32), layers, node_filter=creqs[0].mask
-    ))
-    res, lo = [], 0
-    for c in creqs:
-        hi = lo + len(c.ids)
-        res.append(int(out[lo]) if len(c.ids) == 1 else out[lo:hi].astype(int))
-        lo = hi
-    return res
-
-
-def _exec_khop(net, group_key, creqs):
-    from repro.core.traversal import khop_records
-
-    _, layers, k, mf, _ = group_key
-    flat = [s for c in creqs for s in c.ids]
-    nodes, mask, hops = net.khop(
-        jnp.asarray(flat, jnp.int32), k, max_frontier=mf,
-        layer_names=layers, node_filter=creqs[0].mask,
-    )
-    records = khop_records(flat, nodes, mask, hops)
-    res, lo = [], 0
-    for c in creqs:
-        hi = lo + len(c.ids)
-        res.append(records[lo:hi])
-        lo = hi
-    return res
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("steps", "walkers", "layer_names", "layer_weights"),
-)
-def _walk_exec(net, starts, key, nf, *, steps, walkers, layer_names,
-               layer_weights):
-    """Jitted walk-fleet executor shared by the engine and ``run_request``.
-
-    An eager ``random_walk_batch`` re-traces its scan per call — fatal at
-    serving rates. Serve-trace walk shapes recur (starts length, steps,
-    walkers, layer selection), so each recurring shape compiles once and
-    every later dispatch is a cache hit; using the SAME executor on both
-    paths keeps served results bit-identical to the per-call loop.
-    """
-    from repro.core.traversal import random_walk_batch
-
-    return random_walk_batch(
-        net, starts, steps, key, walkers_per_start=walkers,
-        layer_names=layer_names, layer_weights=layer_weights,
-        node_filter=nf,
-    )
-
-
-def _exec_walkbatch(net, group_key, creqs):
-    _, layers, steps, walkers, seed, weights, _, starts = group_key
-    paths = _walk_exec(
-        net, jnp.asarray(starts, jnp.int32), jax.random.PRNGKey(seed),
-        creqs[0].mask, steps=steps, walkers=walkers, layer_names=layers,
-        layer_weights=weights,
-    )
-    return [np.asarray(paths, dtype=np.int32)] * len(creqs)
-
-
-_EXECUTORS = {
-    "getedge": _exec_getedge,
-    "alters": _exec_alters,
-    "degree": _exec_degree,
-    "khop": _exec_khop,
-    "walkbatch": _exec_walkbatch,
-}
-
-
-def run_request(net, req: dict):
-    """Execute ONE request with no queue, no coalescing, no cache.
-
-    This is the one-call-at-a-time reference the engine's micro-batched
-    results are bit-identical to (and the ``serve_perf`` baseline).
-    """
-    c = canonical_request(net, req)
-    return _EXECUTORS[c.kind](net, c.group_key, [c])[0]
-
-
-def assert_results_equal(a, b) -> None:
-    """Deep bit-identity between two canonical request results.
-
-    The checkable form of the engine's contract (served == per-call
-    reference); used by the ``serve_perf`` benchmark and the test suite.
-    """
-    assert type(a) is type(b), (type(a), type(b))
-    if isinstance(a, dict):
-        assert a.keys() == b.keys()
-        for k in a:
-            assert_results_equal(a[k], b[k])
-    elif isinstance(a, list):
-        assert len(a) == len(b), (len(a), len(b))
-        for x, y in zip(a, b):
-            assert_results_equal(x, y)
-    elif isinstance(a, np.ndarray):
-        np.testing.assert_array_equal(a, b)
-    else:
-        assert a == b, (a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -584,6 +231,7 @@ class GraphServeEngine:
         default_timeout: float | None = None,
         store=None,
         fault_plan=None,
+        shards: int | None = None,
     ):
         if net is None:
             if store is None:
@@ -591,6 +239,18 @@ class GraphServeEngine:
                                  "store to serve from (store=)")
             net = store.net
         self.net = net
+        # shards > 1: executors dispatch against a ShardedNetwork view
+        # (owner-routed point queries, per-shard khop frontier expansion)
+        # while canonicalization/caching stay against ``net`` — results
+        # are bit-identical by the ShardedNetwork contract, so the cache,
+        # the coalescing proof, and run_request parity all carry over.
+        self._n_shards = int(shards) if shards else None
+        if self._n_shards is not None and self._n_shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self._sharded = (
+            shard_network(net, self._n_shards)
+            if self._n_shards and self._n_shards > 1 else None
+        )
         # mutations go WAL-first through the DurableStore when present:
         # a mutation the store could not make durable is rejected before
         # the served network rebinds (fail closed)
@@ -663,7 +323,13 @@ class GraphServeEngine:
         ``default_timeout``) sets a deadline: a request still queued when
         it expires is answered with a ``DeadlineExceeded`` error result
         at the next pump round instead of a stale-by-seconds answer.
+
+        Accepts either a request dict (the trace schema) or a typed
+        ``QueryRequest`` — the single currency shared with ``api`` and
+        the wire frontend.
         """
+        if isinstance(request, QueryRequest):
+            request = request.to_dict()
         timeout = request.get("timeout", self.default_timeout)
         deadline = None
         if timeout is not None:
@@ -773,12 +439,13 @@ class GraphServeEngine:
             for _ in range(min(self._max_heavy, len(self._heavy))):
                 popped.append(self._heavy.popleft())
             net, generation = self.net, self._generation
+            target = self._sharded if self._sharded is not None else net
         if not popped:
             return 0
 
         finished: list[QueryResult] = []
         try:
-            self._pump_round(popped, net, generation, finished)
+            self._pump_round(popped, net, generation, finished, target)
         except Exception as e:
             answered = {r.rid for r in finished}
             msg = f"pump fault: {type(e).__name__}: {e}"
@@ -815,9 +482,17 @@ class GraphServeEngine:
 
     def _pump_round(
         self, popped: list[_Pending], net, generation: int,
-        finished: list[QueryResult],
+        finished: list[QueryResult], target=None,
     ) -> None:
-        """The fallible middle of a pump round; appends to ``finished``."""
+        """The fallible middle of a pump round; appends to ``finished``.
+
+        ``target`` is what executors dispatch against — the engine's
+        ``ShardedNetwork`` view when sharding is on, else ``net``.
+        Canonicalization (layer validation, filter resolution) always
+        runs against ``net``.
+        """
+        if target is None:
+            target = net
         # deadline sweep first: a request that expired while queued gets
         # an error result, never a stale answer (checked once, at pop
         # time — an in-flight dispatch is never abandoned mid-compute)
@@ -884,7 +559,7 @@ class GraphServeEngine:
             try:
                 if self._fault_plan:
                     self._fault_plan.fire("engine.exec")
-                values = _EXECUTORS[kind](net, group_key, creqs)
+                values = _EXECUTORS[kind](target, group_key, creqs)
                 if self._fault_plan:  # chaos: stall between exec + scatter
                     self._fault_plan.fire("pump.batch_delay")
                 errs = [None] * len(values)
@@ -1002,7 +677,7 @@ class GraphServeEngine:
                         self._served += 1
                     kind = str(req.get("kind", "")) if isinstance(
                         req, dict
-                    ) else ""
+                    ) else str(getattr(req, "kind", ""))
                     collected[rid] = QueryResult(
                         rid, kind, None,
                         error=f"{type(e).__name__}: {e}",
@@ -1128,8 +803,17 @@ class GraphServeEngine:
         entry whose attribute mutated was just dropped, and
         ``update_network``, which can change anything, clears the memo).
         """
+        # re-shard outside the lock (host-side CSR slicing + device
+        # placement); the view rebinds atomically with ``net`` below, and
+        # pump() snapshots (net, target) under the same lock, so no round
+        # can pair the new network with a stale sharded view
+        sharded = (
+            shard_network(net, self._n_shards)
+            if self._n_shards and self._n_shards > 1 else None
+        )
         with self._lock:
             self.net = net
+            self._sharded = sharded
             self._generation += 1
             gen = self._generation
             if everything or not self.scoped_invalidation:
@@ -1268,6 +952,7 @@ class GraphServeEngine:
                 "pump_faults": self._pump_faults,
                 "batches": dict(self._batches),
                 "dispatched": dict(self._dispatched),
+                "shards": self._n_shards or 1,
                 "cache": self._cache.stats(),
                 "durable_lsn": (
                     None if self._store is None else self._store.last_lsn

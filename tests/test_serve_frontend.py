@@ -153,6 +153,31 @@ def test_bad_requests_not_retried(net):
         assert resp["ok"] is False and resp["code"] == "bad_request"
 
 
+def test_bad_envelope_error_echoes_request_id(net):
+    """Malformed envelopes still answer with a parseable request id, so
+    pipelined clients can match the error to the in-flight call instead
+    of desynchronizing the whole connection."""
+    cases = [
+        # trailing garbage after valid JSON -> parse error, int id salvaged
+        (b'{"id": 42, "op": "query"} trailing junk\n', 42),
+        # string id, JSON-escaped content survives the salvage
+        (b'{"id": "req-\\"7\\"", oops}\n', 'req-"7"'),
+        # no id anywhere -> id is null, still a bad_request reply
+        (b"not json at all\n", None),
+    ]
+    with GraphServeFrontend(net=net) as fe:
+        for raw, want_id in cases:
+            s = socket.create_connection(fe.address, timeout=5)
+            try:
+                s.sendall(raw)
+                line = s.makefile("rb").readline()
+            finally:
+                s.close()
+            resp = json.loads(line)
+            assert resp["ok"] is False and resp["code"] == "bad_request"
+            assert resp["id"] == want_id, raw
+
+
 # -- idempotency --------------------------------------------------------------
 
 

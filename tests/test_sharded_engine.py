@@ -1,0 +1,251 @@
+"""ShardedNetwork bit-identity property sweep (single-process shards).
+
+The sharded query + traversal engine's contract is exact: every query
+against a ``ShardedNetwork`` returns the same bits as the single-device
+``Network`` path, for any shard count. These sweeps construct graphs
+whose hub nodes and hyperedges deliberately straddle shard boundaries
+(the contiguous-range partition's worst case: one row's neighbors and
+one hyperedge's members split across owners) and compare 2/4/8 shards
+against the unsharded reference, plus the degenerate 1-shard case.
+The 8-device mesh variant lives in test_sharded_graph.py (distributed
+CI leg); these run in-process on one device so the unit leg covers the
+partition logic on every push.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.layers import one_mode_from_edges, two_mode_from_memberships
+from repro.core.request import QueryRequest, run_query
+from repro.core.sharded import ShardedNetwork, shard_network
+from repro.core.traversal import components_batched
+from repro.serve.graph_engine import GraphServeEngine
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _boundary_net(n=400, seed=0):
+    """Hubs + hyperedges straddling every 8-shard boundary.
+
+    With bounds at multiples of n/8, nodes at (and adjacent to) each
+    boundary are made hubs, and each hyperedge's members are drawn from
+    a window crossing a boundary — so khop frontiers, alter unions, and
+    component sweeps all have to follow cross-shard edges.
+    """
+    rng = np.random.default_rng(seed)
+    bounds = [(n * s) // 8 for s in range(1, 8)]
+    src = [rng.integers(0, n, 1500)]
+    dst = [rng.integers(0, n, 1500)]
+    for b in bounds:  # hub at each boundary, edges to both sides
+        src.append(np.full(60, b))
+        dst.append(rng.integers(max(0, b - n // 8), min(n, b + n // 8), 60))
+    net = api.createnetwork(n)
+    net = net.with_layer("ties", one_mode_from_edges(
+        n, np.concatenate(src), np.concatenate(dst), directed=False))
+    # hyperedges whose members straddle a boundary window
+    nodes, hes = [], []
+    for h in range(40):
+        b = bounds[h % len(bounds)]
+        members = rng.integers(max(0, b - 20), min(n, b + 20), 12)
+        nodes.append(members)
+        hes.append(np.full(members.size, h))
+    net = net.with_layer("hh", two_mode_from_memberships(
+        n, 40, np.concatenate(nodes), np.concatenate(hes)))
+    return net
+
+
+@pytest.fixture(scope="module")
+def net():
+    return _boundary_net()
+
+
+def _eq(a, b, what):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=what)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_point_queries_bit_identical(net, n_shards):
+    sn = shard_network(net, n_shards)
+    rng = np.random.default_rng(n_shards)
+    n = net.n_nodes
+    # boundary-heavy query batch: every shard bound, its neighbors, and
+    # a random fill
+    bounds = np.asarray(sn.bounds[1:-1], np.int64)
+    u = np.concatenate([bounds, bounds - 1, bounds + 1,
+                        rng.integers(0, n, 64)]).astype(np.int32)
+    v = np.concatenate([bounds + 1, bounds, bounds - 1,
+                        rng.integers(0, n, 64)]).astype(np.int32)
+    for layer in ("ties", "hh"):
+        _eq(net.edge_value(layer, u, v), sn.edge_value(layer, u, v),
+            f"edge_value[{layer}] @ {n_shards} shards")
+    _eq(net.check_edge_any(u, v), sn.check_edge_any(u, v),
+        f"check_edge_any @ {n_shards} shards")
+    av, am = net.node_alters(u, 64)
+    bv, bm = sn.node_alters(u, 64)
+    _eq(av, bv, "alters vals")
+    _eq(am, bm, "alters mask")
+    _eq(net.degree(u), sn.degree(u), "degree")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_point_queries_filtered_bit_identical(net, n_shards):
+    sn = shard_network(net, n_shards)
+    n = net.n_nodes
+    nf = (np.arange(n) % 3 != 0)
+    u = np.arange(0, n, 7, dtype=np.int32)
+    v = ((u.astype(np.int64) * 13 + 5) % n).astype(np.int32)
+    for layer in ("ties", "hh"):
+        _eq(net.edge_value(layer, u, v, node_filter=nf),
+            sn.edge_value(layer, u, v, node_filter=nf), "filtered ev")
+    av, am = net.node_alters(u, 64, node_filter=nf)
+    bv, bm = sn.node_alters(u, 64, node_filter=nf)
+    _eq(av, bv, "filtered alters vals")
+    _eq(am, bm, "filtered alters mask")
+    _eq(net.degree(u, node_filter=nf), sn.degree(u, node_filter=nf),
+        "filtered degree")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_khop_bit_identical_across_boundaries(net, n_shards):
+    sn = shard_network(net, n_shards)
+    bounds = np.asarray(sn.bounds[1:-1], np.int64)
+    # sources AT the boundaries: hop 1 immediately crosses shards
+    src = np.concatenate([bounds, [0, net.n_nodes - 1]]).astype(np.int32)
+    for k, mf in ((1, 64), (2, 128), (3, 256)):
+        a = net.khop(src, k, max_frontier=mf)
+        b = sn.khop(src, k, max_frontier=mf)
+        for x, y, what in zip(a, b, ("nodes", "mask", "hops")):
+            _eq(x, y, f"khop {what} k={k} @ {n_shards} shards")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_khop_filtered_and_single_layer(net, n_shards):
+    sn = shard_network(net, n_shards)
+    nf = (np.arange(net.n_nodes) % 4 != 0)
+    src = np.asarray([0, 57, 113], np.int32)
+    for layers in (["ties"], ["hh"], None):
+        a = net.khop(src, 2, max_frontier=128, layer_names=layers,
+                     node_filter=nf)
+        b = sn.khop(src, 2, max_frontier=128, layer_names=layers,
+                    node_filter=nf)
+        for x, y in zip(a, b):
+            _eq(x, y, f"khop layers={layers}")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_components_bit_identical(net, n_shards):
+    sn = shard_network(net, n_shards)
+    _eq(components_batched(net), sn.components(), "components")
+    nf = (np.arange(net.n_nodes) % 2 == 0)
+    _eq(components_batched(net, node_filter=nf), sn.components(node_filter=nf),
+        "filtered components")
+    for layers in (["ties"], ["hh"]):
+        _eq(components_batched(net, layer_names=layers),
+            sn.components(layer_names=layers), f"components {layers}")
+
+
+def test_one_shard_degenerate_equals_unsharded(net):
+    sn = shard_network(net, 1)
+    assert sn.n_shards == 1
+    u = np.arange(0, net.n_nodes, 11, dtype=np.int32)
+    _eq(net.degree(u), sn.degree(u), "1-shard degree")
+    a = net.khop(u[:4], 2, max_frontier=128)
+    b = sn.khop(u[:4], 2, max_frontier=128)
+    for x, y in zip(a, b):
+        _eq(x, y, "1-shard khop")
+
+
+def test_shard_rows_partition_the_graph(net):
+    """Structural invariant: per-layer shard nnz sums to the layer nnz,
+    and each shard holds exactly its range's rows."""
+    sn = shard_network(net, 4)
+    for li, name in enumerate(net.layer_names):
+        whole = net.layers[li]
+        csr_of = (lambda l: l.memb) if hasattr(whole, "memb") else (
+            lambda l: l.out)
+        total = sum(csr_of(s.layers[li]).nnz for s in sn.shards)
+        assert total == csr_of(whole).nnz
+        indptr = np.asarray(csr_of(whole).indptr)
+        for s, shard in enumerate(sn.shards):
+            lo, hi = int(sn.bounds[s]), int(sn.bounds[s + 1])
+            sp = np.asarray(csr_of(shard.layers[li]).indptr)
+            # rows outside [lo, hi) are empty; owned rows match source
+            assert sp[0] == 0 and sp[lo] == 0
+            np.testing.assert_array_equal(
+                np.diff(sp[lo:hi + 1]), np.diff(indptr[lo:hi + 1]))
+            assert sp[hi] == sp[-1]
+
+
+def test_queryrequest_runs_against_sharded(net):
+    sn = shard_network(net, 4)
+    reqs = [
+        QueryRequest.getedge("hh", 49, 51),
+        QueryRequest.alters(50, max_alters=64),
+        QueryRequest.degree([49, 50, 51]),
+        QueryRequest.khop([50], 2, max_frontier=128),
+        QueryRequest.walkbatch([50], 4, seed=3),
+    ]
+    for q in reqs:
+        a, b = run_query(net, q), run_query(sn, q)
+        if isinstance(a, list):
+            assert a == b or all(
+                np.array_equal(np.asarray(x), np.asarray(y))
+                for x, y in zip(a, b)
+            )
+        else:
+            _eq(a, b, q.kind)
+
+
+def test_engine_shards_bit_identical_to_reference(net):
+    rng = np.random.default_rng(5)
+    n = net.n_nodes
+    reqs = []
+    for _ in range(40):
+        reqs.append({"kind": "getedge", "layer": "ties",
+                     "u": int(rng.integers(n)), "v": int(rng.integers(n))})
+        reqs.append({"kind": "alters", "u": int(rng.integers(n)),
+                     "max_alters": 32})
+        reqs.append({"kind": "degree", "u": [int(rng.integers(n))
+                                             for _ in range(3)]})
+    for _ in range(8):
+        reqs.append({"kind": "khop", "sources": [int(rng.integers(n))],
+                     "k": 2, "max_frontier": 128})
+        reqs.append({"kind": "walkbatch", "starts": int(rng.integers(n)),
+                     "steps": 4, "seed": 1})
+    ref = GraphServeEngine(net).serve(reqs)
+    shd = GraphServeEngine(net, shards=4).serve(reqs)
+    assert len(ref) == len(shd)
+    for a, b in zip(ref, shd):
+        assert a.error == b.error
+        if a.error is None:
+            if isinstance(a.value, np.ndarray):
+                _eq(a.value, b.value, "engine value")
+            else:
+                assert a.value == b.value
+
+
+def test_engine_reshards_after_mutation(net):
+    eng = GraphServeEngine(net, shards=4)
+    assert isinstance(eng._sharded, ShardedNetwork)
+    n = net.n_nodes
+    before = eng.serve([{"kind": "getedge", "layer": "ties",
+                         "u": 0, "v": n - 1}])[0].value
+    assert before == 0.0
+    eng.add_edges("ties", [0], [n - 1])
+    after = eng.serve([{"kind": "getedge", "layer": "ties",
+                        "u": 0, "v": n - 1}])[0].value
+    assert after == 1.0
+    assert eng._sharded.source is eng.net
+    assert eng.stats["shards"] == 4
+
+
+def test_shard_network_validates():
+    net = _boundary_net(n=16)
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_network(net, 0)
+    # more shards than nodes degrades gracefully to n shards
+    sn = shard_network(net, 64)
+    assert sn.n_shards <= 16
+    _eq(net.degree(np.arange(16, dtype=np.int32)),
+        sn.degree(np.arange(16, dtype=np.int32)), "tiny degree")

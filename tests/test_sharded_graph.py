@@ -82,3 +82,66 @@ assert moved > 100, "walkers barely moved"
 print("WALK_OK", moved)
 """
     assert "WALK_OK" in _run(code)
+
+def test_sharded_network_bit_identity_on_8_device_mesh():
+    """ShardedNetwork on the forced 8-CPU-device mesh: shards land on
+    distinct devices (round-robin placement) and every query kind is
+    bit-identical to the single-device Network path."""
+    code = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import api
+from repro.core.layers import one_mode_from_edges, two_mode_from_memberships
+from repro.core.sharded import shard_network
+from repro.core.traversal import components_batched
+
+assert len(jax.devices()) == 8
+n = 640
+rng = np.random.default_rng(7)
+bounds = [(n * s) // 8 for s in range(1, 8)]
+src = [rng.integers(0, n, 2400)]
+dst = [rng.integers(0, n, 2400)]
+for b in bounds:  # hub pinned at each shard boundary
+    src.append(np.full(50, b))
+    dst.append(rng.integers(0, n, 50))
+net = api.createnetwork(n)
+net = net.with_layer("ties", one_mode_from_edges(
+    n, np.concatenate(src), np.concatenate(dst), directed=False))
+nodes, hes = [], []
+for h in range(32):
+    b = bounds[h % 7]
+    members = rng.integers(max(0, b - 24), min(n, b + 24), 10)
+    nodes.append(members); hes.append(np.full(members.size, h))
+net = net.with_layer("hh", two_mode_from_memberships(
+    n, 32, np.concatenate(nodes), np.concatenate(hes)))
+
+sn = shard_network(net, 8)
+# shard payloads must be spread over all 8 devices
+devset = set()
+for s in sn.shards:
+    for leaf in jax.tree_util.tree_leaves(s):
+        if hasattr(leaf, "devices"):
+            devset |= leaf.devices()
+assert len(devset) == 8, f"shards on {len(devset)} devices, want 8"
+
+u = np.concatenate([np.asarray(bounds), rng.integers(0, n, 64)]).astype(np.int32)
+v = np.concatenate([np.asarray(bounds) + 1, rng.integers(0, n, 64)]).astype(np.int32)
+for layer in ("ties", "hh"):
+    np.testing.assert_array_equal(
+        np.asarray(net.edge_value(layer, u, v)),
+        np.asarray(sn.edge_value(layer, u, v)))
+av, am = net.node_alters(u, 64)
+bv, bm = sn.node_alters(u, 64)
+np.testing.assert_array_equal(np.asarray(av), np.asarray(bv))
+np.testing.assert_array_equal(np.asarray(am), np.asarray(bm))
+np.testing.assert_array_equal(np.asarray(net.degree(u)), np.asarray(sn.degree(u)))
+srcs = np.asarray(bounds, np.int32)
+a = net.khop(srcs, 2, max_frontier=128)
+b = sn.khop(srcs, 2, max_frontier=128)
+for x, y in zip(a, b):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+np.testing.assert_array_equal(
+    np.asarray(components_batched(net)), np.asarray(sn.components()))
+print("MESH_SHARDED_OK", len(devset))
+"""
+    assert "MESH_SHARDED_OK 8" in _run(code)

@@ -1,0 +1,155 @@
+"""Mutation churn: overlay add/delete vs full CSR rebuild (BENCH_10.json).
+
+The incremental-mutation claim: a small batched ``add_edges`` /
+``delete_edges`` into a large layer costs O(batch + touched-row content
++ n_rows) through the delta overlay, not the O(nnz) of re-running the
+chunked CSR builders. This script drives the same small-batch churn
+workload (64-edge upsert + 32-edge delete per round) against a 1M+
+entry one-mode layer twice:
+
+* **overlay** — the shipped default (``DEFAULT_COMPACT_RATIO``): each
+  batch lands in the layer's delta overlay, queries merge at query
+  time;
+* **rebuild** — ``compact_ratio=0`` forces an immediate fold back into
+  a fresh base CSR after every batch, i.e. the pre-overlay cost model.
+
+Bit-identity is asserted IN-RUN before any timing is recorded: after
+the full churn schedule both layers must produce identical edge values
+on probe pairs, identical degree tables, and ``compact_layer`` of the
+overlay run must reproduce the rebuild run's CSR arrays exactly.
+
+compare.py gates churn/batch_rebuild_us / churn/batch_overlay_us
+(>= 10x tracked at full scale; smoke sizes shrink the gap since the
+rebuild is cheap on a tiny layer).
+
+Standalone:  python benchmarks/mutation_churn.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _build_layer(n_nodes: int, mean_degree: int, seed: int = 7):
+    from repro.core.layers import one_mode_from_edges
+
+    rng = np.random.default_rng(seed)
+    m = n_nodes * mean_degree
+    src = rng.integers(0, n_nodes, m)
+    dst = rng.integers(0, n_nodes, m)
+    vals = rng.uniform(0.5, 5.0, m).astype(np.float32)
+    return one_mode_from_edges(
+        n_nodes, src, dst, values=vals, directed=True
+    )
+
+
+def _schedule(n_nodes: int, rounds: int, seed: int = 11):
+    """Deterministic churn schedule: per round, one upsert batch and one
+    delete batch (deletes target pairs just added, so tombstones and
+    upsert-over-tombstone paths both exercise)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(rounds):
+        a_src = rng.integers(0, n_nodes, 64)
+        a_dst = rng.integers(0, n_nodes, 64)
+        a_val = rng.uniform(0.5, 5.0, 64).astype(np.float32)
+        kill = rng.permutation(64)[:32]
+        out.append((a_src, a_dst, a_val, a_src[kill], a_dst[kill]))
+    return out
+
+
+def _churn(layer, schedule, compact_ratio):
+    """Run the schedule; returns (final layer, per-batch seconds)."""
+    from repro.core.layers import add_edges, delete_edges
+
+    times = []
+    for a_src, a_dst, a_val, d_src, d_dst in schedule:
+        t0 = time.perf_counter()
+        layer = add_edges(
+            layer, a_src, a_dst, values=a_val, compact_ratio=compact_ratio
+        )
+        layer = delete_edges(
+            layer, d_src, d_dst, compact_ratio=compact_ratio
+        )
+        times.append(time.perf_counter() - t0)
+    return layer, times
+
+
+def _assert_bit_identical(ov_layer, rb_layer, n_nodes: int, seed=13):
+    import jax.numpy as jnp
+
+    from repro.core.layers import compact_layer
+
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.integers(0, n_nodes, 512), jnp.int32)
+    v = jnp.asarray(rng.integers(0, n_nodes, 512), jnp.int32)
+    ev_ov = np.asarray(ov_layer.edge_value(u, v))
+    ev_rb = np.asarray(rb_layer.edge_value(u, v))
+    assert np.array_equal(ev_ov, ev_rb), "edge_value diverged"
+    assert np.array_equal(
+        np.asarray(ov_layer.degrees()), np.asarray(rb_layer.degrees())
+    ), "degrees diverged"
+    folded = compact_layer(ov_layer)
+    for name in ("indptr", "indices", "values"):
+        a = getattr(folded.out, name)
+        b = getattr(rb_layer.out, name)
+        if a is None or b is None:
+            assert a is None and b is None
+            continue
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"compacted out.{name} != rebuild out.{name}"
+        )
+
+
+def run(smoke: bool = False) -> dict[str, float]:
+    """-> {row_name: value} for BENCH_10.json."""
+    n_nodes = 2_000 if smoke else 50_000
+    mean_degree = 8 if smoke else 40  # full: 2M stored directed edges
+    rounds = 3 if smoke else 20
+
+    layer = _build_layer(n_nodes, mean_degree)
+    base_nnz = layer.n_edges
+    schedule = _schedule(n_nodes, rounds)
+
+    from repro.core.layers import DEFAULT_COMPACT_RATIO
+
+    ov_layer, ov_times = _churn(layer, schedule, DEFAULT_COMPACT_RATIO)
+    rb_layer, rb_times = _churn(layer, schedule, 0.0)
+    _assert_bit_identical(ov_layer, rb_layer, n_nodes)
+
+    ov_us = float(np.median(ov_times) * 1e6)
+    rb_us = float(np.median(rb_times) * 1e6)
+    return {
+        "churn/base_nnz": float(base_nnz),
+        "churn/batch_overlay_us": ov_us,
+        "churn/batch_rebuild_us": rb_us,
+        "churn/overlay_speedup": rb_us / max(ov_us, 1e-9),
+    }
+
+
+def main() -> None:
+    import argparse
+    import json
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(
+        0, str(Path(__file__).resolve().parents[1] / "src")
+    )
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    for k, v in sorted(rows.items()):
+        print(f"{k},{v:.3f}")
+    if args.json:
+        Path(args.json).write_text(
+            json.dumps(rows, indent=2, sort_keys=True) + "\n"
+        )
+
+
+if __name__ == "__main__":
+    main()

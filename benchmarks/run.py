@@ -38,6 +38,7 @@ RESULTS_SERVE_MUT: dict[str, float] = {}  # mutating serve workload (BENCH_6.jso
 RESULTS_SCALE: dict[str, float] = {}  # 10M-node Table 1 workload (BENCH_7.json)
 RESULTS_SLO: dict[str, float] = {}  # open-loop serve tail latency (BENCH_8.json)
 RESULTS_SHARDED: dict[str, float] = {}  # sharded traversal scaling (BENCH_9.json)
+RESULTS_CHURN: dict[str, float] = {}  # mutation churn overlay vs rebuild (BENCH_10.json)
 
 
 def emit(
@@ -182,6 +183,25 @@ def sharded_perf() -> None:
         data = json.loads(out.read_text())
     for key, val in sorted(data.items()):
         emit(key, float(val), results=RESULTS_SHARDED)
+
+
+def mutation_churn_perf() -> None:
+    """Small-batch mutation churn: overlay vs full rebuild (BENCH_10.json).
+
+    Runs benchmarks/mutation_churn.py in-process: the identical add/
+    delete schedule lands once through the delta-overlay path and once
+    with ``compact_ratio=0`` (immediate fold = the pre-overlay rebuild
+    cost), with bit-identity asserted in-run before any timing counts.
+    compare.py gates the rebuild/overlay latency ratio.
+    """
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).parent))
+    import mutation_churn
+
+    for key, val in sorted(mutation_churn.run(smoke=SMOKE).items()):
+        emit(key, float(val), results=RESULTS_CHURN)
 
 
 def query_perf(net) -> None:
@@ -942,6 +962,7 @@ def main() -> None:
     serve_perf_mutating(net)
     serve_slo_perf(net)
     sharded_perf()
+    mutation_churn_perf()
     shortest_path(net)
     walk_throughput(net)
     kernel_intersect()
@@ -958,6 +979,7 @@ def main() -> None:
     print(f"# wrote {write_bench_json(RESULTS_SCALE, Path(__file__).parent / 'BENCH_7.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SLO, Path(__file__).parent / 'BENCH_8.json')}")
     print(f"# wrote {write_bench_json(RESULTS_SHARDED, Path(__file__).parent / 'BENCH_9.json')}")
+    print(f"# wrote {write_bench_json(RESULTS_CHURN, Path(__file__).parent / 'BENCH_10.json')}")
 
 
 if __name__ == "__main__":

@@ -156,6 +156,12 @@ class _LayerExpander:
     """Pre-extracts row-id arrays so expansion is pure jnp (jit-friendly)."""
 
     def __init__(self, layer):
+        from .layers import compact_layer, has_overlay
+
+        if has_overlay(layer):
+            # expansion reads raw CSR buffers; fold the delta overlay
+            # first (bit-identical by the compaction contract)
+            layer = compact_layer(layer)
         self.layer = layer
         if isinstance(layer, LayerTwoMode):
             self.memb_rows = csr_row_ids(layer.memb)

@@ -39,7 +39,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .csr import CSR, SENTINEL, csr_row_gather, on_tpu as _on_tpu, sorted_isin
+from .csr import CSR, SENTINEL, on_tpu as _on_tpu, sorted_isin
+from .overlay import (
+    eff_host_degree_table,
+    eff_host_degrees,
+    eff_row_gather,
+    ov_buffers,
+)
 
 __all__ = [
     "DEFAULT_BUCKET_WIDTHS",
@@ -78,11 +84,14 @@ def can_dispatch(*arrays) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _host_degrees(csr: CSR, rows: np.ndarray) -> np.ndarray:
-    """Row lengths read straight from indptr (mirrors the device clip)."""
-    indptr = np.asarray(csr.indptr)
-    rows = np.clip(rows.astype(np.int64), 0, max(csr.n_rows - 1, 0))
-    return (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+def _host_degrees(csr: CSR, rows: np.ndarray, ov=None) -> np.ndarray:
+    """Effective row lengths read from indptr (mirrors the device clip).
+
+    ``ov`` is the CSR's delta overlay (core/overlay.py): dirty rows take
+    the delta's length — the post-mutation truth the bucket plan must pad
+    for.
+    """
+    return eff_host_degrees(csr, ov, rows)
 
 
 def _width_ladder(max_width: int, widths) -> list[int]:
@@ -133,7 +142,7 @@ def _pad_rows(ids: np.ndarray, n: int) -> jnp.ndarray:
 # instead of being wiped wholesale as before. A strict cycle over more
 # than the cap still misses every time — as under any eviction policy —
 # but each miss costs one layer's width table, not all of them.
-_NODE_WIDTH_CACHE: dict[int, tuple[object, np.ndarray]] = {}
+_NODE_WIDTH_CACHE: dict[tuple, tuple[tuple, np.ndarray]] = {}
 _NODE_WIDTH_CACHE_MAX = 64
 
 
@@ -146,9 +155,16 @@ def node_max_hyperedge_size(layer) -> np.ndarray:
     below 2**31 (DtypePolicy widens only indptr, never sizes). At 10M+
     nodes the narrower table halves this cache's footprint vs int64.
     """
-    key = id(layer.memb.indices)
+    memb_ov = getattr(layer, "memb_ov", None)
+    members_ov = getattr(layer, "members_ov", None)
+    pins = (
+        layer.memb.indices,
+        None if memb_ov is None else memb_ov.delta.indices,
+        None if members_ov is None else members_ov.delta.indices,
+    )
+    key = tuple(id(p) for p in pins)
     hit = _NODE_WIDTH_CACHE.get(key)
-    if hit is not None and hit[0] is layer.memb.indices:
+    if hit is not None and all(a is b for a, b in zip(hit[0], pins)):
         # LRU: a hit re-promotes to newest (pop default guards a
         # concurrent hit on the same key having popped it first)
         _NODE_WIDTH_CACHE.pop(key, None)
@@ -156,7 +172,11 @@ def node_max_hyperedge_size(layer) -> np.ndarray:
         return hit[1]
     indptr = np.asarray(layer.memb.indptr)
     indices = np.asarray(layer.memb.indices)
-    he_sizes = np.diff(np.asarray(layer.members.indptr)).astype(np.int32)
+    # effective hyperedge sizes: a grown/shrunk hyperedge changes the
+    # width bound of every node that contains it, dirty row or not
+    he_sizes = eff_host_degree_table(layer.members, members_ov).astype(
+        np.int32
+    )
     out = np.zeros(layer.memb.n_rows, dtype=np.int32)
     if indices.size:
         per_memb = he_sizes[indices]
@@ -164,10 +184,21 @@ def node_max_hyperedge_size(layer) -> np.ndarray:
         nonempty = lengths > 0
         starts = indptr[:-1][nonempty]
         out[nonempty] = np.maximum.reduceat(per_memb, starts)
+    if memb_ov is not None:
+        # dirty membership rows re-derive from the delta's row content
+        dirty = np.asarray(memb_ov.dirty)
+        dind = np.asarray(memb_ov.delta.indptr)
+        dids = np.asarray(memb_ov.delta.indices)
+        out[dirty] = 0
+        if dids.size:
+            dlen = np.diff(dind)
+            dne = (dlen > 0) & dirty
+            dstarts = dind[:-1][dne]
+            out[dne] = np.maximum.reduceat(he_sizes[dids], dstarts)
     _NODE_WIDTH_CACHE.pop(key, None)  # recycled id: re-insert as newest
     while len(_NODE_WIDTH_CACHE) >= _NODE_WIDTH_CACHE_MAX:
         del _NODE_WIDTH_CACHE[next(iter(_NODE_WIDTH_CACHE))]
-    _NODE_WIDTH_CACHE[key] = (layer.memb.indices, out)
+    _NODE_WIDTH_CACHE[key] = (pins, out)
     return out
 
 
@@ -215,7 +246,7 @@ def _node_alters_bucket(
 
 @functools.partial(jax.jit, static_argnames=("width",))
 def _one_mode_filtered_degree_bucket(layer, u, node_filter, *, width):
-    vals, mask = csr_row_gather(layer.out, u, width)
+    vals, mask = eff_row_gather(layer.out, layer.out_ov, u, width)
     hit = mask & jnp.take(node_filter, vals, mode="clip")
     return jnp.sum(hit, axis=-1).astype(jnp.int32)
 
@@ -263,8 +294,10 @@ def bucketed_edge_value(
             )
             out = out.at[jnp.asarray(np.nonzero(keep)[0])].set(sub)
         return out.reshape(shape)
+    memb_ov = getattr(layer, "memb_ov", None)
     deg = np.maximum(
-        _host_degrees(layer.memb, un), _host_degrees(layer.memb, vn)
+        _host_degrees(layer.memb, un, memb_ov),
+        _host_degrees(layer.memb, vn, memb_ov),
     )
     out = jnp.zeros((B,), jnp.float32)
     for idx, w in plan_buckets(deg, layer.max_memberships, widths):
@@ -320,7 +353,7 @@ def bucketed_node_alters(
     nf = None if node_filter is None else jnp.asarray(
         np.asarray(node_filter, dtype=bool)
     )
-    deg = _host_degrees(layer.memb, un)
+    deg = _host_degrees(layer.memb, un, getattr(layer, "memb_ov", None))
     per_node_wn = node_max_hyperedge_size(layer)
     vals = jnp.full((B, max_alters), SENTINEL, jnp.int32)
     for idx, wm in plan_buckets(deg, layer.max_memberships, widths):
@@ -371,7 +404,7 @@ def bucketed_filtered_degree(
     out = jnp.zeros((B,), jnp.int32)
     memb = getattr(layer, "memb", None)
     if memb is None:  # one-mode
-        deg = _host_degrees(layer.out, un)
+        deg = _host_degrees(layer.out, un, layer.out_ov)
         for idx, w in plan_buckets(deg, max(int(deg.max()), 1), widths):
             n = _pow2_rows(idx.size)
             res = _one_mode_filtered_degree_bucket(
@@ -379,7 +412,7 @@ def bucketed_filtered_degree(
             )
             out = out.at[jnp.asarray(idx)].set(res[: idx.size])
         return out.reshape(shape)
-    deg = _host_degrees(memb, un)
+    deg = _host_degrees(memb, un, getattr(layer, "memb_ov", None))
     per_node_wn = node_max_hyperedge_size(layer)
     for idx, wm in plan_buckets(deg, layer.max_memberships, widths):
         needed = int(per_node_wn[np.clip(un[idx], 0, per_node_wn.size - 1)].max())
@@ -420,10 +453,15 @@ def alters_bound(layers, u, n_nodes: int) -> int:
     total = np.zeros(un.size, dtype=np.int64)
     for layer in layers:
         memb = getattr(layer, "memb", None)
-        csr = memb if memb is not None else layer.out
-        if not can_dispatch(csr.indptr, csr.indices):
+        if memb is not None:
+            csr, ov = memb, getattr(layer, "memb_ov", None)
+            other = ov_buffers(getattr(layer, "members_ov", None))
+        else:
+            csr, ov = layer.out, layer.out_ov
+            other = ()
+        if not can_dispatch(csr.indptr, csr.indices, *ov_buffers(ov), *other):
             return n_nodes
-        deg = _host_degrees(csr, un)
+        deg = _host_degrees(csr, un, ov)
         if memb is not None:
             wn = node_max_hyperedge_size(layer)
             wn_u = wn[np.clip(un, 0, wn.size - 1)]

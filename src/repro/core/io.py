@@ -108,7 +108,12 @@ def save_network(
     net: Network, path: str | Path, compress: bool = True
 ) -> None:
     """Serialize to one ``.npz``. ``compress=False`` writes STORED zip
-    members (larger on disk, but ``load_network(mmap=True)``-able)."""
+    members (larger on disk, but ``load_network(mmap=True)``-able).
+
+    Delta overlays are folded into rebuilt base CSRs first — the on-disk
+    format stores plain CSRs, and a reloaded network is bit-identical to
+    the overlay-carrying one by the compaction contract."""
+    net = net.compacted()
     arrays: dict[str, np.ndarray] = {}
     manifest: dict = {"format": "threadle-jax/2", "n_nodes": net.n_nodes,
                       "layers": [], "attrs": []}
@@ -258,7 +263,11 @@ def _iter_lines(f, path: Path):
 
 def export_layer_tsv(net: Network, layer_name: str, path: str | Path) -> None:
     """One-mode: ``src\\tdst[\\tvalue]`` rows; two-mode: ``node\\thyperedge``."""
+    from .layers import compact_layer, has_overlay
+
     layer = net.layer(layer_name)
+    if has_overlay(layer):
+        layer = compact_layer(layer)
     path = Path(path)
     with _open_text(path, "w") as f:
         if isinstance(layer, LayerTwoMode):

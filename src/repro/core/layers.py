@@ -31,15 +31,26 @@ from .csr import (
     CSR,
     SENTINEL,
     DtypePolicy,
-    csr_contains,
     csr_empty,
-    csr_from_coo,
     csr_from_coo_chunks,
-    csr_row_gather,
-    csr_row_sample,
     csr_transpose,
-    csr_value_at,
     sorted_isin,
+)
+from .overlay import (
+    DeltaOverlay,
+    eff_contains,
+    eff_coo,
+    eff_degrees,
+    eff_host_degree_table,
+    eff_max_degree,
+    eff_n_rows,
+    eff_nnz,
+    eff_row_gather,
+    eff_row_sample,
+    eff_value_at,
+    ov_buffers,
+    overlay_ratio,
+    overlay_update,
 )
 
 __all__ = [
@@ -47,11 +58,25 @@ __all__ = [
     "LayerTwoMode",
     "add_edges",
     "delete_edges",
+    "compact_layer",
+    "has_overlay",
+    "layer_overlay_ratio",
     "one_mode_from_edges",
     "one_mode_from_edge_chunks",
     "two_mode_from_memberships",
     "two_mode_from_membership_chunks",
+    "DEFAULT_COMPACT_RATIO",
 ]
+
+# Compaction policy: fold the overlay into the base CSR once the delta
+# grows past this fraction of the base nnz (and always on snapshot).
+DEFAULT_COMPACT_RATIO = 0.25
+
+
+def _ov_nbytes(ov: DeltaOverlay | None) -> int:
+    if ov is None:
+        return 0
+    return ov.delta.nbytes + int(ov.dirty.nbytes)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +99,8 @@ class LayerOneMode:
     valued: bool
     allow_self: bool
     store_inbound: bool
+    out_ov: DeltaOverlay | None = None
+    in_ov: DeltaOverlay | None = None
 
     # -- shared query interface (pseudo-projection-compatible) -------------
 
@@ -88,12 +115,13 @@ class LayerOneMode:
     @property
     def n_edges(self) -> int:
         """Logical edge count (undirected edges counted once)."""
-        return self.out.nnz if self.directed else self.out.nnz // 2
+        nnz = eff_nnz(self.out, self.out_ov)
+        return nnz if self.directed else nnz // 2
 
     def check_edge(
         self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
     ) -> jnp.ndarray:
-        hit = csr_contains(self.out, u, v)
+        hit = eff_contains(self.out, self.out_ov, u, v)
         if node_filter is not None:
             hit = hit & jnp.take(jnp.asarray(node_filter), v, mode="clip")
         return hit
@@ -101,7 +129,7 @@ class LayerOneMode:
     def edge_value(
         self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
     ) -> jnp.ndarray:
-        val = csr_value_at(self.out, u, v)
+        val = eff_value_at(self.out, self.out_ov, u, v)
         if node_filter is not None:
             val = jnp.where(
                 jnp.take(jnp.asarray(node_filter), v, mode="clip"), val, 0.0
@@ -117,8 +145,8 @@ class LayerOneMode:
         ``node_filter`` (bool[n_nodes]) drops neighbors failing an
         attribute predicate (mask holes; ids replaced by SENTINEL).
         """
-        csr = self._in_csr() if inbound else self.out
-        vals, mask = csr_row_gather(csr, u, max_alters)
+        csr, ov = self._in_pair() if inbound else (self.out, self.out_ov)
+        vals, mask = eff_row_gather(csr, ov, u, max_alters)
         if node_filter is not None:
             mask = mask & jnp.take(
                 jnp.asarray(node_filter), vals, mode="clip"
@@ -130,56 +158,69 @@ class LayerOneMode:
         """Count of out-neighbors passing ``node_filter`` -> int32[B].
 
         Concrete batches run degree-bucketed (core/dispatch.py); traced
-        batches use an O(nnz) per-node filtered-degree precompute.
+        batches use an O(nnz) per-node filtered-degree precompute (the
+        overlay's dirty rows take the delta's precompute instead).
         """
         if dispatch.can_dispatch(
-            u, node_filter, self.out.indptr, self.out.indices
+            u, node_filter, self.out.indptr, self.out.indices,
+            *ov_buffers(self.out_ov),
         ):
             return dispatch.bucketed_filtered_degree(self, u, node_filter)
         nf = jnp.asarray(node_filter)
-        rows = jnp.searchsorted(
-            self.out.indptr,
-            jnp.arange(self.out.nnz, dtype=jnp.int32),
-            side="right",
-        ) - 1
-        contrib = jnp.take(nf, self.out.indices, mode="clip").astype(jnp.int32)
-        per_node = jnp.zeros((self.out.n_rows,), jnp.int32).at[rows].add(contrib)
+
+        def per_node_counts(csr):
+            rows = jnp.searchsorted(
+                csr.indptr,
+                jnp.arange(csr.nnz, dtype=jnp.int32),
+                side="right",
+            ) - 1
+            contrib = jnp.take(nf, csr.indices, mode="clip").astype(jnp.int32)
+            return jnp.zeros((csr.n_rows,), jnp.int32).at[rows].add(contrib)
+
+        per_node = per_node_counts(self.out)
+        if self.out_ov is not None:
+            per_node = jnp.where(
+                self.out_ov.dirty, per_node_counts(self.out_ov.delta), per_node
+            )
         return jnp.take(per_node, u, mode="clip")
 
     def sample_neighbor(
         self, u: jnp.ndarray, key: jax.Array
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Uniform random out-neighbor per query node (random walk step)."""
-        return csr_row_sample(self.out, u, key)
+        return eff_row_sample(self.out, self.out_ov, u, key)
 
     def degrees(self) -> jnp.ndarray:
-        return self.out.degrees()
+        return eff_degrees(self.out, self.out_ov)
 
     def max_degree(self) -> int:
-        return self.out.max_degree()
+        return eff_max_degree(self.out, self.out_ov)
 
     # -- misc ---------------------------------------------------------------
 
-    def _in_csr(self) -> CSR:
+    def _in_pair(self) -> tuple[CSR, DeltaOverlay | None]:
         if not self.directed:
-            return self.out
+            return self.out, self.out_ov
         if self.in_ is None:
             raise ValueError(
                 "inbound edges not stored (store_inbound=False); "
                 "re-import the layer with inbound storage enabled"
             )
-        return self.in_
+        return self.in_, self.in_ov
+
+    def _in_csr(self) -> CSR:
+        return self._in_pair()[0]
 
     @property
     def nbytes(self) -> int:
-        n = self.out.nbytes
+        n = self.out.nbytes + _ov_nbytes(self.out_ov)
         if self.in_ is not None:
-            n += self.in_.nbytes
+            n += self.in_.nbytes + _ov_nbytes(self.in_ov)
         return n
 
     def drop_inbound(self) -> "LayerOneMode":
         """Paper §3.2: disable inbound storage, ~halving directed-layer memory."""
-        return replace(self, in_=None, store_inbound=False)
+        return replace(self, in_=None, in_ov=None, store_inbound=False)
 
 
 def one_mode_from_edges(
@@ -317,6 +358,8 @@ class LayerTwoMode:
     members: CSR
     max_memberships: int
     max_hyperedge_size: int
+    memb_ov: DeltaOverlay | None = None
+    members_ov: DeltaOverlay | None = None
 
     @property
     def mode(self) -> int:
@@ -328,15 +371,18 @@ class LayerTwoMode:
 
     @property
     def n_hyperedges(self) -> int:
-        return self.members.n_rows
+        return eff_n_rows(self.members, self.members_ov)
 
     @property
     def n_memberships(self) -> int:
-        return self.memb.nnz
+        return eff_nnz(self.memb, self.memb_ov)
 
     @property
     def nbytes(self) -> int:
-        return self.memb.nbytes + self.members.nbytes
+        return (
+            self.memb.nbytes + self.members.nbytes
+            + _ov_nbytes(self.memb_ov) + _ov_nbytes(self.members_ov)
+        )
 
     # -- pseudo-projection queries (paper Listing 1, batched) ---------------
 
@@ -344,7 +390,14 @@ class LayerTwoMode:
         self, u: jnp.ndarray, max_len: int | None = None
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         k = self.max_memberships if max_len is None else max_len
-        return csr_row_gather(self.memb, u, max(k, 1))
+        return eff_row_gather(self.memb, self.memb_ov, u, max(k, 1))
+
+    def member_rows(
+        self, he: jnp.ndarray, max_len: int | None = None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Padded member lists per hyperedge id (overlay-merged gather)."""
+        k = self.max_hyperedge_size if max_len is None else max_len
+        return eff_row_gather(self.members, self.members_ov, he, max(k, 1))
 
     def check_edge(
         self, u: jnp.ndarray, v: jnp.ndarray, node_filter=None
@@ -365,7 +418,8 @@ class LayerTwoMode:
         filter return 0 (and skip the bucketed work entirely).
         """
         if dispatch.can_dispatch(
-            u, v, node_filter, self.memb.indptr, self.memb.indices
+            u, v, node_filter, self.memb.indptr, self.memb.indices,
+            *ov_buffers(self.memb_ov), *ov_buffers(self.members_ov),
         ):
             return dispatch.bucketed_edge_value(
                 self, u, v, node_filter=node_filter
@@ -403,6 +457,7 @@ class LayerTwoMode:
         if dispatch.can_dispatch(
             u, node_filter, self.memb.indptr, self.memb.indices,
             self.members.indptr, self.members.indices,
+            *ov_buffers(self.memb_ov), *ov_buffers(self.members_ov),
         ):
             return dispatch.bucketed_node_alters(
                 self, u, max_alters, node_filter=node_filter
@@ -436,6 +491,7 @@ class LayerTwoMode:
         if dispatch.can_dispatch(
             u, node_filter, self.memb.indptr, self.memb.indices,
             self.members.indptr, self.members.indices,
+            *ov_buffers(self.memb_ov), *ov_buffers(self.members_ov),
         ):
             return dispatch.bucketed_filtered_degree(self, u, node_filter)
         bound = max(self.max_memberships * self.max_hyperedge_size, 1)
@@ -454,23 +510,27 @@ class LayerTwoMode:
         then kept as 'stay' if unlucky (documented bias ~1/k_h).
         """
         k1, k2, k3 = jax.random.split(key, 3)
-        he, he_valid = csr_row_sample(self.memb, u, k1)
-        v, m_valid = csr_row_sample(self.members, jnp.where(he_valid, he, 0), k2)
+        he, he_valid = eff_row_sample(self.memb, self.memb_ov, u, k1)
+        v, m_valid = eff_row_sample(
+            self.members, self.members_ov, jnp.where(he_valid, he, 0), k2
+        )
         # one resample round for self-draws
-        v2, _ = csr_row_sample(self.members, jnp.where(he_valid, he, 0), k3)
+        v2, _ = eff_row_sample(
+            self.members, self.members_ov, jnp.where(he_valid, he, 0), k3
+        )
         v = jnp.where(v == u, v2, v)
         valid = he_valid & m_valid
         return jnp.where(valid, v, u.astype(jnp.int32)), valid
 
     def degrees(self) -> jnp.ndarray:
         """Membership counts per node (bipartite degree, not projected)."""
-        return self.memb.degrees()
+        return eff_degrees(self.memb, self.memb_ov)
 
     def max_degree(self) -> int:
-        return self.memb.max_degree()
+        return eff_max_degree(self.memb, self.memb_ov)
 
     def hyperedge_sizes(self) -> jnp.ndarray:
-        return self.members.degrees()
+        return eff_degrees(self.members, self.members_ov)
 
     def equivalent_projected_edges(self) -> int:
         """Σ_h k_h(k_h−1)/2 — paper Eq. (1): size of the never-built projection.
@@ -480,7 +540,7 @@ class LayerTwoMode:
         int32, and paper-scale sums (8e12 at 20M nodes) would overflow
         any device-side int32 accumulation (jax x64 is disabled).
         """
-        k = np.diff(np.asarray(self.members.indptr)).astype(np.int64)
+        k = eff_host_degree_table(self.members, self.members_ov)
         return int(np.sum(k * (k - 1) // 2, dtype=np.int64))
 
 
@@ -529,20 +589,18 @@ def two_mode_from_membership_chunks(
 # ---------------------------------------------------------------------------
 
 
-def _csr_coo(csr: CSR) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
-    """Expand a CSR back to host COO (rows, cols, values|None)."""
-    indptr = np.asarray(csr.indptr)
-    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
-    cols = np.asarray(csr.indices).astype(np.int64)
-    vals = None if csr.values is None else np.asarray(csr.values)
-    return rows, cols, vals
+def _csr_coo(
+    csr: CSR, ov: DeltaOverlay | None = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Expand a CSR (+ optional overlay) to host COO (rows, cols, values)."""
+    return eff_coo(csr, ov)
 
 
 def _one_mode_logical_edges(
     layer: LayerOneMode,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
-    """The layer's logical edge list (undirected edges listed once)."""
-    rows, cols, vals = _csr_coo(layer.out)
+    """The layer's effective logical edge list (undirected edges once)."""
+    rows, cols, vals = eff_coo(layer.out, layer.out_ov)
     if not layer.directed:
         keep = rows <= cols  # each undirected edge stored in both rows
         rows, cols = rows[keep], cols[keep]
@@ -550,15 +608,74 @@ def _one_mode_logical_edges(
     return rows, cols, vals
 
 
-def add_edges(layer, src, dst, values=None):
-    """Batched edge insert -> new layer (functional; host-side rebuild).
+def has_overlay(layer) -> bool:
+    """True when the layer carries uncompacted delta state."""
+    if isinstance(layer, LayerTwoMode):
+        return layer.memb_ov is not None or layer.members_ov is not None
+    return layer.out_ov is not None or layer.in_ov is not None
 
-    One-mode layers take (src, dst[, values]) edge triples — an edge that
-    already exists keeps the NEW value (upsert). Two-mode layers take
-    (node, hyperedge) membership pairs; the hyperedge space grows if a
-    new id exceeds it. Rebuilding CSR is O(nnz + batch): incremental
-    batches amortize exactly like the C# engine's hash-set inserts, and
-    the result is bit-identical to constructing from scratch.
+
+def layer_overlay_ratio(layer) -> float:
+    """Largest delta-to-base nnz ratio across the layer's overlays."""
+    if isinstance(layer, LayerTwoMode):
+        return max(
+            overlay_ratio(layer.memb, layer.memb_ov),
+            overlay_ratio(layer.members, layer.members_ov),
+        )
+    r = overlay_ratio(layer.out, layer.out_ov)
+    if layer.in_ is not None:
+        r = max(r, overlay_ratio(layer.in_, layer.in_ov))
+    return r
+
+
+def compact_layer(layer):
+    """Fold the delta overlay into a fresh base CSR (bit-identical).
+
+    The effective edge set goes back through the standard builders, so
+    the result is exactly the layer a from-scratch construction of the
+    same edges would produce — the overlay-vs-rebuild identity contract.
+    """
+    if not has_overlay(layer):
+        return layer
+    if isinstance(layer, LayerTwoMode):
+        rows, cols, _ = eff_coo(layer.memb, layer.memb_ov)
+        return two_mode_from_memberships(
+            layer.n_nodes, layer.n_hyperedges, rows, cols
+        )
+    rows, cols, vals = _one_mode_logical_edges(layer)
+    return one_mode_from_edges(
+        layer.n_nodes,
+        rows,
+        cols,
+        values=vals,
+        directed=layer.directed,
+        allow_self=layer.allow_self,
+        store_inbound=layer.store_inbound,
+    )
+
+
+def _maybe_compact(layer, compact_ratio):
+    if compact_ratio is not None and layer_overlay_ratio(layer) > compact_ratio:
+        return compact_layer(layer)
+    return layer
+
+
+def add_edges(layer, src, dst, values=None, *,
+              compact_ratio=DEFAULT_COMPACT_RATIO):
+    """Batched edge insert -> new layer (functional; overlay fast path).
+
+    One-mode layers take (src, dst[, values]) edge triples — an edge
+    that already exists takes the NEW value when ``values`` is given,
+    and KEEPS its stored value when ``values=None`` (new edges default
+    to 1.0). Two-mode layers take (node, hyperedge) membership pairs;
+    the hyperedge space grows if a new id exceeds it.
+
+    The batch lands in the layer's delta overlay: only the touched rows
+    are re-resolved, so cost is O(batch + touched-row content), not
+    O(nnz). Queries merge the overlay at query time, bit-identical to a
+    full rebuild; once the delta outgrows ``compact_ratio`` × base nnz
+    the overlay is folded back into the base (``compact_ratio=0``
+    forces an immediate rebuild, ``None`` never auto-compacts).
     """
     src = np.atleast_1d(np.asarray(src, dtype=np.int64))
     dst = np.atleast_1d(np.asarray(dst, dtype=np.int64))
@@ -567,76 +684,131 @@ def add_edges(layer, src, dst, values=None):
     if isinstance(layer, LayerTwoMode):
         if values is not None:
             raise ValueError("two-mode memberships carry no edge values")
-        rows, cols, _ = _csr_coo(layer.memb)
-        n_hyper = max(
-            layer.n_hyperedges, int(dst.max()) + 1 if dst.size else 0
+        if src.size == 0:
+            return layer
+        n_hyper = max(layer.n_hyperedges, int(dst.max()) + 1)
+        memb_ov = overlay_update(
+            layer.memb, layer.memb_ov, src, dst, None, n_cols=n_hyper,
         )
-        return two_mode_from_memberships(
-            layer.n_nodes,
-            n_hyper,
-            np.concatenate([src, rows]),
-            np.concatenate([dst, cols]),
+        members_ov = overlay_update(
+            layer.members, layer.members_ov, dst, src, None, n_rows=n_hyper,
         )
-    osrc, odst, ovals = _one_mode_logical_edges(layer)
+        new = replace(
+            layer,
+            memb_ov=memb_ov,
+            members_ov=members_ov,
+            max_memberships=max(eff_max_degree(layer.memb, memb_ov), 1),
+            max_hyperedge_size=max(
+                eff_max_degree(layer.members, members_ov), 1
+            ),
+        )
+        return _maybe_compact(new, compact_ratio)
     if layer.valued:
-        new_vals = (
+        # values given: the batch goes FIRST, so the first-occurrence
+        # dedup upserts the NEW value. values=None: existing content
+        # goes first — an existing edge KEEPS its stored value and only
+        # genuinely new edges get the 1.0 default.
+        new_first = values is not None
+        vals = (
             np.ones(src.shape, np.float32) if values is None
             else np.broadcast_to(
                 np.asarray(values, dtype=np.float32), src.shape
             )
         )
-        vals = np.concatenate([new_vals, ovals])
     else:
         if values is not None:
             raise ValueError(
                 "layer is unvalued; re-import it valued to carry values"
             )
+        new_first = True
         vals = None
-    # new edges FIRST: csr_from_coo's stable dedup keeps the first
-    # occurrence per (u, v), so an upsert takes the new value
-    return one_mode_from_edges(
-        layer.n_nodes,
-        np.concatenate([src, osrc]),
-        np.concatenate([dst, odst]),
-        values=vals,
-        directed=layer.directed,
-        allow_self=layer.allow_self,
-        store_inbound=layer.store_inbound,
+    if not layer.allow_self:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if vals is not None:
+            vals = vals[keep]
+    if src.size == 0:
+        return layer
+    if layer.directed:
+        bs, bd, bv = src, dst, vals
+    else:
+        # canonicalize to (min, max) then mirror: both stored rows of an
+        # undirected edge resolve to the same winning value, whichever
+        # orientation the batch used
+        lo, hi = np.minimum(src, dst), np.maximum(src, dst)
+        bs, bd = np.concatenate([lo, hi]), np.concatenate([hi, lo])
+        bv = None if vals is None else np.concatenate([vals, vals])
+    out_ov = overlay_update(
+        layer.out, layer.out_ov, bs, bd, bv,
+        valued=layer.valued, new_first=new_first,
     )
+    in_ov = layer.in_ov
+    if layer.directed and layer.in_ is not None:
+        in_ov = overlay_update(
+            layer.in_, layer.in_ov, dst, src, vals,
+            valued=layer.valued, new_first=new_first,
+        )
+    new = replace(layer, out_ov=out_ov, in_ov=in_ov)
+    return _maybe_compact(new, compact_ratio)
 
 
-def delete_edges(layer, src, dst):
+def delete_edges(layer, src, dst, *, compact_ratio=DEFAULT_COMPACT_RATIO):
     """Batched edge delete -> new layer (missing pairs are ignored).
 
     One-mode undirected layers treat (u, v) and (v, u) as the same edge;
-    two-mode layers delete (node, hyperedge) membership pairs.
+    two-mode layers delete (node, hyperedge) membership pairs. Deletes
+    are tombstones in the delta overlay: the touched rows re-resolve
+    without the named pairs, same compaction policy as ``add_edges``.
     """
     src = np.atleast_1d(np.asarray(src, dtype=np.int64))
     dst = np.atleast_1d(np.asarray(dst, dtype=np.int64))
     if src.shape != dst.shape:
         raise ValueError("src/dst length mismatch")
     if isinstance(layer, LayerTwoMode):
-        rows, cols, _ = _csr_coo(layer.memb)
-        n = np.int64(layer.n_hyperedges)
-        drop = np.isin(rows * n + cols, src * n + dst)
-        return two_mode_from_memberships(
-            layer.n_nodes, layer.n_hyperedges, rows[~drop], cols[~drop]
+        ok = (
+            (src >= 0) & (src < layer.n_nodes)
+            & (dst >= 0) & (dst < layer.n_hyperedges)
         )
-    osrc, odst, ovals = _one_mode_logical_edges(layer)
-    n = np.int64(layer.n_nodes)
-    gone = src * n + dst
-    if not layer.directed:
-        gone = np.concatenate([gone, dst * n + src])
-    drop = np.isin(osrc * n + odst, gone)
-    return one_mode_from_edges(
-        layer.n_nodes,
-        osrc[~drop],
-        odst[~drop],
-        values=None if ovals is None else ovals[~drop],
-        directed=layer.directed,
-        allow_self=layer.allow_self,
-        store_inbound=layer.store_inbound,
+        src, dst = src[ok], dst[ok]
+        if src.size == 0:
+            return layer
+        memb_ov = overlay_update(
+            layer.memb, layer.memb_ov, src, dst, None, delete=True,
+        )
+        members_ov = overlay_update(
+            layer.members, layer.members_ov, dst, src, None, delete=True,
+        )
+        new = replace(
+            layer,
+            memb_ov=memb_ov,
+            members_ov=members_ov,
+            max_memberships=max(eff_max_degree(layer.memb, memb_ov), 1),
+            max_hyperedge_size=max(
+                eff_max_degree(layer.members, members_ov), 1
+            ),
+        )
+        return _maybe_compact(new, compact_ratio)
+    n = layer.n_nodes
+    ok = (src >= 0) & (src < n) & (dst >= 0) & (dst < n)
+    src, dst = src[ok], dst[ok]
+    if src.size == 0:
+        return layer
+    if layer.directed:
+        bs, bd = src, dst
+    else:
+        bs, bd = np.concatenate([src, dst]), np.concatenate([dst, src])
+    out_ov = overlay_update(
+        layer.out, layer.out_ov, bs, bd, None,
+        delete=True, valued=layer.valued,
     )
+    in_ov = layer.in_ov
+    if layer.directed and layer.in_ is not None:
+        in_ov = overlay_update(
+            layer.in_, layer.in_ov, dst, src, None,
+            delete=True, valued=layer.valued,
+        )
+    new = replace(layer, out_ov=out_ov, in_ov=in_ov)
+    return _maybe_compact(new, compact_ratio)
 
 
 def two_mode_empty(n_nodes: int, n_hyperedges: int) -> LayerTwoMode:

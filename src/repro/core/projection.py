@@ -11,7 +11,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from .layers import LayerOneMode, LayerTwoMode, one_mode_from_edges
+from .layers import (
+    LayerOneMode, LayerTwoMode, compact_layer, has_overlay,
+    one_mode_from_edges,
+)
 
 __all__ = ["project_two_mode", "projection_nbytes"]
 
@@ -32,6 +35,8 @@ def project_two_mode(
             f"(~{eq * 8 / 2**40:.1f} TiB at 8 B/edge); this is the paper's "
             "projection problem — use pseudo-projection queries instead"
         )
+    if has_overlay(layer):
+        layer = compact_layer(layer)
     indptr = np.asarray(layer.members.indptr)
     members = np.asarray(layer.members.indices)
     srcs, dsts = [], []

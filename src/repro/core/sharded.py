@@ -54,6 +54,9 @@ from .csr import CSR, SENTINEL
 from .layers import LayerOneMode, LayerTwoMode
 from .network import Network, _as_batch
 from .nodeset import node_filter_mask
+from .overlay import (
+    DeltaOverlay, eff_edge_stream, eff_host_degree_table, eff_nnz,
+)
 from .pytree import pytree_dataclass
 
 
@@ -297,21 +300,54 @@ def _slice_csr_rows(csr: CSR, lo: int, hi: int) -> CSR:
     )
 
 
+def _slice_overlay(
+    ov: DeltaOverlay | None, base_slice: CSR, lo: int, hi: int,
+) -> DeltaOverlay | None:
+    """Row-range restriction of a delta overlay.
+
+    The delta CSR slices exactly like a base CSR (full row space kept,
+    owned rows byte-identical). The dirty mask stays whole — a dirty
+    row outside [lo, hi) selects an EMPTY delta row over an equally
+    empty sliced-base row, so non-owned rows still resolve empty.
+    ``base_shadowed`` is recomputed against the sliced base so the
+    shard's effective-nnz accounting covers owned rows only.
+    """
+    if ov is None:
+        return None
+    delta = _slice_csr_rows(ov.delta, lo, hi)
+    bdeg = np.diff(np.asarray(base_slice.indptr).astype(np.int64))
+    dirty_np = np.asarray(ov.dirty)[: base_slice.n_rows]
+    return DeltaOverlay(
+        delta=delta,
+        dirty=ov.dirty,
+        base_shadowed=int(bdeg[dirty_np].sum()),
+    )
+
+
 def _slice_layer(layer, lo: int, hi: int):
     """One shard's view of a layer: owned rows only, global column ids."""
     if isinstance(layer, LayerTwoMode):
         memb = _slice_csr_rows(layer.memb, lo, hi)
-        local = np.asarray(layer.memb.indptr)[lo : hi + 1]
-        mm = int(np.diff(local).max()) if hi > lo else 0
+        deg = eff_host_degree_table(layer.memb, layer.memb_ov)[lo:hi]
+        mm = int(deg.max()) if deg.size else 0
         return LayerTwoMode(
             memb=memb,
             members=layer.members,  # replicated hyperedge directory
+            memb_ov=_slice_overlay(layer.memb_ov, memb, lo, hi),
+            members_ov=layer.members_ov,
             max_memberships=max(mm, 1),
             max_hyperedge_size=layer.max_hyperedge_size,
         )
+    out = _slice_csr_rows(layer.out, lo, hi)
+    in_ = None if layer.in_ is None else _slice_csr_rows(layer.in_, lo, hi)
     return LayerOneMode(
-        out=_slice_csr_rows(layer.out, lo, hi),
-        in_=None if layer.in_ is None else _slice_csr_rows(layer.in_, lo, hi),
+        out=out,
+        in_=in_,
+        out_ov=_slice_overlay(layer.out_ov, out, lo, hi),
+        in_ov=(
+            None if layer.in_ov is None
+            else _slice_overlay(layer.in_ov, in_, lo, hi)
+        ),
         directed=layer.directed,
         valued=layer.valued,
         allow_self=layer.allow_self,
@@ -591,6 +627,79 @@ def shard_network(
     return ShardedNetwork(net, tuple(shards), bounds)
 
 
+def _base_csrs(layer) -> tuple:
+    if isinstance(layer, LayerTwoMode):
+        return (layer.memb, layer.members)
+    return (layer.out, layer.in_)
+
+
+def reshard_deltas(
+    snet: ShardedNetwork, new_net: Network,
+) -> ShardedNetwork | None:
+    """Cheap re-shard when only delta overlays changed.
+
+    Overlay-only mutation keeps every base CSR object-identical, so the
+    shards' row-sliced bases are still valid — only the O(delta)
+    overlay slices need recomputing. Returns ``None`` when anything
+    other than overlays changed (compaction, nodeset growth, layer set
+    changes), signalling the caller to fall back to ``shard_network``.
+    """
+    old = snet.source
+    if new_net is old:
+        return snet
+    if (
+        new_net.nodeset is not old.nodeset
+        or new_net.layer_names != old.layer_names
+        or len(new_net.layers) != len(old.layers)
+    ):
+        return None
+    for nl, ol in zip(new_net.layers, old.layers):
+        if type(nl) is not type(ol):
+            return None
+        if any(a is not b for a, b in zip(_base_csrs(nl), _base_csrs(ol))):
+            return None
+
+    shards = []
+    for s in range(snet.n_shards):
+        lo, hi = int(snet.bounds[s]), int(snet.bounds[s + 1])
+        old_sub = snet.shards[s]
+        layers = []
+        for nl, ol, osl in zip(new_net.layers, old.layers, old_sub.layers):
+            if nl is ol:
+                layers.append(osl)  # untouched layer: shard view reused
+            elif isinstance(nl, LayerTwoMode):
+                deg = eff_host_degree_table(nl.memb, nl.memb_ov)[lo:hi]
+                mm = int(deg.max()) if deg.size else 0
+                layers.append(LayerTwoMode(
+                    memb=osl.memb,
+                    members=nl.members,
+                    memb_ov=_slice_overlay(nl.memb_ov, osl.memb, lo, hi),
+                    members_ov=nl.members_ov,
+                    max_memberships=max(mm, 1),
+                    max_hyperedge_size=nl.max_hyperedge_size,
+                ))
+            else:
+                layers.append(LayerOneMode(
+                    out=osl.out,
+                    in_=osl.in_,
+                    out_ov=_slice_overlay(nl.out_ov, osl.out, lo, hi),
+                    in_ov=(
+                        None if nl.in_ov is None
+                        else _slice_overlay(nl.in_ov, osl.in_, lo, hi)
+                    ),
+                    directed=nl.directed,
+                    valued=nl.valued,
+                    allow_self=nl.allow_self,
+                    store_inbound=nl.store_inbound,
+                ))
+        shards.append(Network(
+            nodeset=new_net.nodeset,
+            layers=tuple(layers),
+            layer_names=new_net.layer_names,
+        ))
+    return ShardedNetwork(new_net, tuple(shards), snet.bounds)
+
+
 def sharded_khop(
     snet: ShardedNetwork,
     sources,
@@ -782,7 +891,6 @@ def sharded_components(
     propagation, so it is bit-identical to ``components_batched``
     regardless of how sweeps were partitioned or ordered.
     """
-    from .csr import csr_row_ids
     from .traversal import _INF
 
     n = snet.n_nodes
@@ -794,11 +902,17 @@ def sharded_components(
         prep = []
         for layer in shard._select(layer_names):
             if isinstance(layer, LayerTwoMode):
-                if layer.memb.nnz:
-                    prep.append((layer, csr_row_ids(layer.memb),
-                                 csr_row_ids(layer.members)))
-            elif layer.out.nnz:
-                prep.append((layer, csr_row_ids(layer.out), None))
+                if eff_nnz(layer.memb, layer.memb_ov):
+                    mrows, mcols = eff_edge_stream(layer.memb, layer.memb_ov)
+                    hrows, hcols = eff_edge_stream(
+                        layer.members, layer.members_ov
+                    )
+                    prep.append(
+                        (layer.n_hyperedges, mrows, mcols, hrows, hcols)
+                    )
+            elif eff_nnz(layer.out, layer.out_ov):
+                rows, cols = eff_edge_stream(layer.out, layer.out_ov)
+                prep.append((None, rows, cols, None, None))
         if prep:
             shard_prep.append(prep)
 
@@ -808,31 +922,29 @@ def sharded_components(
 
     def sweep(prep, labels):
         # one shard's propagation pass — the traversal.components_batched
-        # sweep body over this shard's row-sliced CSRs
-        for layer, rows, hrows in prep:
-            if hrows is None:
-                csr = layer.out
+        # sweep body over this shard's effective edge streams
+        for n_he, rows, cols, hrows, hcols in prep:
+            if n_he is None:
                 src_lab = jnp.take(labels, rows)
-                dst_lab = jnp.take(labels, csr.indices)
+                dst_lab = jnp.take(labels, cols)
                 if nfj is not None:
                     live = (
                         jnp.take(nfj, rows)
-                        & jnp.take(nfj, csr.indices, mode="clip")
+                        & jnp.take(nfj, cols, mode="clip")
                     )
                     src_lab = jnp.where(live, src_lab, _INF)
                     dst_lab = jnp.where(live, dst_lab, _INF)
-                labels = labels.at[csr.indices].min(src_lab)
+                labels = labels.at[cols].min(src_lab)
                 labels = labels.at[rows].min(dst_lab)
             else:
-                mem_lab = jnp.take(labels, layer.members.indices)
+                mem_lab = jnp.take(labels, hcols)
                 if nfj is not None:
                     mem_lab = jnp.where(
-                        jnp.take(nfj, layer.members.indices, mode="clip"),
-                        mem_lab, _INF,
+                        jnp.take(nfj, hcols, mode="clip"), mem_lab, _INF
                     )
-                he = jnp.full((layer.n_hyperedges,), _INF, dtype=jnp.int32)
+                he = jnp.full((n_he,), _INF, dtype=jnp.int32)
                 he = he.at[hrows].min(mem_lab)
-                node_min = jnp.take(he, layer.memb.indices)
+                node_min = jnp.take(he, cols)
                 if nfj is not None:
                     node_min = jnp.where(
                         jnp.take(nfj, rows, mode="clip"), node_min, _INF

@@ -283,7 +283,10 @@ class DurableStore:
         if (self.snapshot_every is not None
                 and self._ops_since_snapshot >= self.snapshot_every):
             self.snapshot()
-        return new_net
+        # snapshot() may have folded delta overlays into the base; hand
+        # callers the committed (possibly compacted) network, not the
+        # pre-compaction object
+        return self._net
 
     def replace(self, net) -> None:
         """Swap in a whole new network (update_network) via checkpoint.
@@ -301,7 +304,16 @@ class DurableStore:
     # -- maintenance ---------------------------------------------------------
 
     def snapshot(self) -> Path:
-        """Checkpoint the current network at the current WAL position."""
+        """Checkpoint the current network at the current WAL position.
+
+        Snapshots double as overlay compaction points: any delta
+        overlays accumulated by incremental ``add_edges``/
+        ``delete_edges`` fold into rebuilt base CSRs, the image on disk
+        stores the plain CSRs, and the in-memory network rebinds to the
+        compacted form (queries are bit-identical by the overlay
+        contract).
+        """
+        self._net = self._net.compacted()
         path = write_snapshot(self._net, self.dir, lsn=self._wal.last_lsn,
                               fsync=self.fsync)
         self._ops_since_snapshot = 0

@@ -62,11 +62,16 @@ _INF = jnp.int32(2**31 - 1)
 
 
 def _layer_buffers(layer):
+    from .overlay import ov_buffers
+
     memb = getattr(layer, "memb", None)
     if memb is not None:
         return (memb.indptr, memb.indices,
-                layer.members.indptr, layer.members.indices)
-    return (layer.out.indptr, layer.out.indices)
+                layer.members.indptr, layer.members.indices,
+                *ov_buffers(getattr(layer, "memb_ov", None)),
+                *ov_buffers(getattr(layer, "members_ov", None)))
+    return (layer.out.indptr, layer.out.indices,
+            *ov_buffers(layer.out_ov))
 
 
 def _hop_cap(
@@ -402,47 +407,53 @@ def components_batched(
     labels between selected nodes. Directed layers are treated as
     undirected (weak components).
     """
-    from .csr import csr_row_ids
     from .layers import LayerTwoMode
+    from .overlay import eff_edge_stream, eff_nnz
 
     n = net.n_nodes
     layers = net._select(layer_names)
     nf = node_filter_mask(node_filter, n)
     nfj = None if nf is None else jnp.asarray(nf)
+    # per-layer effective (row, col) edge streams: base CSR order for
+    # overlay-free layers, clean-base + dirty-delta entries otherwise —
+    # min-label scatters are order-independent, so both are bit-identical
+    # to sweeping the rebuilt layer
     prep = []
     for layer in layers:
         if isinstance(layer, LayerTwoMode):
-            if layer.memb.nnz:
-                prep.append((layer, csr_row_ids(layer.memb),
-                             csr_row_ids(layer.members)))
-        elif layer.out.nnz:
-            prep.append((layer, csr_row_ids(layer.out), None))
+            if eff_nnz(layer.memb, layer.memb_ov):
+                mrows, mcols = eff_edge_stream(layer.memb, layer.memb_ov)
+                hrows, hcols = eff_edge_stream(
+                    layer.members, layer.members_ov
+                )
+                prep.append((layer.n_hyperedges, mrows, mcols, hrows, hcols))
+        elif eff_nnz(layer.out, layer.out_ov):
+            rows, cols = eff_edge_stream(layer.out, layer.out_ov)
+            prep.append((None, rows, cols, None, None))
 
     def sweep(labels):
-        for layer, rows, hrows in prep:
-            if hrows is None:
-                csr = layer.out
+        for n_he, rows, cols, hrows, hcols in prep:
+            if n_he is None:
                 src_lab = jnp.take(labels, rows)
-                dst_lab = jnp.take(labels, csr.indices)
+                dst_lab = jnp.take(labels, cols)
                 if nfj is not None:
                     live = (
                         jnp.take(nfj, rows)
-                        & jnp.take(nfj, csr.indices, mode="clip")
+                        & jnp.take(nfj, cols, mode="clip")
                     )
                     src_lab = jnp.where(live, src_lab, _INF)
                     dst_lab = jnp.where(live, dst_lab, _INF)
-                labels = labels.at[csr.indices].min(src_lab)
+                labels = labels.at[cols].min(src_lab)
                 labels = labels.at[rows].min(dst_lab)
             else:
-                mem_lab = jnp.take(labels, layer.members.indices)
+                mem_lab = jnp.take(labels, hcols)
                 if nfj is not None:
                     mem_lab = jnp.where(
-                        jnp.take(nfj, layer.members.indices, mode="clip"),
-                        mem_lab, _INF,
+                        jnp.take(nfj, hcols, mode="clip"), mem_lab, _INF
                     )
-                he = jnp.full((layer.n_hyperedges,), _INF, dtype=jnp.int32)
+                he = jnp.full((n_he,), _INF, dtype=jnp.int32)
                 he = he.at[hrows].min(mem_lab)
-                node_min = jnp.take(he, layer.memb.indices)
+                node_min = jnp.take(he, cols)
                 if nfj is not None:
                     node_min = jnp.where(
                         jnp.take(nfj, rows, mode="clip"), node_min, _INF

@@ -12,9 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csr import (
-    SENTINEL, csr_row_gather, on_tpu as _on_tpu, sorted_isin,
-)
+from repro.core.csr import SENTINEL, on_tpu as _on_tpu, sorted_isin
 from . import ref
 from .frontier import frontier_kernel
 from .intersect import intersect_count_kernel
@@ -190,9 +188,7 @@ def pseudo_node_alters(
     """
     he, he_mask = layer.memberships(u, width_m)
     wn = layer.max_hyperedge_size if width_n is None else max(width_n, 1)
-    mem, mem_mask = csr_row_gather(
-        layer.members, jnp.where(he_mask, he, 0), wn
-    )
+    mem, mem_mask = layer.member_rows(jnp.where(he_mask, he, 0), wn)
     mem_mask = mem_mask & he_mask[..., None]
     if node_filter is not None:
         mem_mask = mem_mask & jnp.take(node_filter, mem, mode="clip")

@@ -110,7 +110,7 @@ from repro.core.request import (  # noqa: F401  (re-exported serving API)
     canonical_request,
     run_request,
 )
-from repro.core.sharded import shard_network
+from repro.core.sharded import reshard_deltas, shard_network
 
 
 class QueueFull(RuntimeError):
@@ -806,11 +806,16 @@ class GraphServeEngine:
         # re-shard outside the lock (host-side CSR slicing + device
         # placement); the view rebinds atomically with ``net`` below, and
         # pump() snapshots (net, target) under the same lock, so no round
-        # can pair the new network with a stale sharded view
-        sharded = (
-            shard_network(net, self._n_shards)
-            if self._n_shards and self._n_shards > 1 else None
-        )
+        # can pair the new network with a stale sharded view. Overlay-only
+        # mutations (the incremental add/delete_edges path) skip the full
+        # re-shard: every base CSR is object-identical, so only the
+        # O(delta) per-shard overlay slices are recomputed.
+        sharded = None
+        if self._n_shards and self._n_shards > 1:
+            if self._sharded is not None:
+                sharded = reshard_deltas(self._sharded, net)
+            if sharded is None:
+                sharded = shard_network(net, self._n_shards)
         with self._lock:
             self.net = net
             self._sharded = sharded
@@ -976,7 +981,7 @@ def _import_layer_op_from_file(net, name: str, file: str, **kw) -> dict:
 
     layer = import_layer_tsv(file, net.n_nodes, **kw)
     if isinstance(layer, LayerTwoMode):
-        rows, cols, _ = _csr_coo(layer.memb)
+        rows, cols, _ = _csr_coo(layer.memb, layer.memb_ov)
         return make_import_layer_op(
             name, rows, cols, mode=2, n_hyperedges=layer.n_hyperedges
         )

@@ -247,7 +247,7 @@ def test_node_width_cache_evicts_oldest_not_everything():
     assert len(dispatch._NODE_WIDTH_CACHE) == cap
     # the 8 oldest were evicted one at a time; everything newer stays
     for i, layer in enumerate(layers):
-        key = id(layer.memb.indices)
+        key = (id(layer.memb.indices), id(None), id(None))
         assert (key in dispatch._NODE_WIDTH_CACHE) == (i >= 8)
     # warm entries return the cached array by identity (no recompute)
     for i in range(8, len(layers)):
@@ -256,7 +256,8 @@ def test_node_width_cache_evicts_oldest_not_everything():
     # re-querying an evicted layer recomputes correctly and re-inserts
     re0 = dispatch.node_max_hyperedge_size(layers[0])
     np.testing.assert_array_equal(re0, tables[0])
-    assert id(layers[0].memb.indices) in dispatch._NODE_WIDTH_CACHE
+    key0 = (id(layers[0].memb.indices), id(None), id(None))
+    assert key0 in dispatch._NODE_WIDTH_CACHE
 
 
 def test_node_width_cache_hit_promotes_hot_layer():

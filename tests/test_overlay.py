@@ -1,0 +1,540 @@
+"""Incremental mutation (delta overlays + tombstones) vs full rebuild.
+
+The overlay contract: a layer mutated through ``add_edges`` /
+``delete_edges`` with the batch parked in a delta overlay must answer
+every query bit-identically to a from-scratch layer built from the same
+logical edge set, and ``compact_layer`` must reproduce that from-scratch
+layer's CSR arrays exactly. The tests hold a dict-based edge model as
+the independent oracle and sweep randomized interleaved schedules over
+every layer flavour.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import create_network
+from repro.core.layers import (
+    DEFAULT_COMPACT_RATIO,
+    add_edges,
+    compact_layer,
+    delete_edges,
+    has_overlay,
+    layer_overlay_ratio,
+    one_mode_from_edges,
+    two_mode_from_memberships,
+)
+
+N = 12  # exhaustive pair checks stay cheap
+
+
+# ---------------------------------------------------------------------------
+# dict-based oracle
+# ---------------------------------------------------------------------------
+
+
+def _key(u, v, directed):
+    return (u, v) if directed else (min(u, v), max(u, v))
+
+
+def _model_add(model, src, dst, values, *, directed, valued):
+    seen = set()
+    for i in range(len(src)):
+        u, v = int(src[i]), int(dst[i])
+        if u == v:
+            continue  # allow_self=False default
+        k = _key(u, v, directed)
+        if values is None:
+            model.setdefault(k, 1.0)
+        elif k not in seen:
+            model[k] = float(np.float32(values[i]))
+        seen.add(k)
+
+
+def _model_delete(model, src, dst, *, directed, n):
+    for i in range(len(src)):
+        u, v = int(src[i]), int(dst[i])
+        if not (0 <= u < n and 0 <= v < n):
+            continue
+        model.pop(_key(u, v, directed), None)
+
+
+def _model_layer(model, *, n, directed, valued):
+    if not model:
+        return one_mode_from_edges(
+            n, [], [],
+            values=[] if valued else None, directed=directed,
+        )
+    keys = list(model.keys())
+    src = np.array([k[0] for k in keys], np.int64)
+    dst = np.array([k[1] for k in keys], np.int64)
+    vals = (
+        np.array([model[k] for k in keys], np.float32) if valued else None
+    )
+    return one_mode_from_edges(n, src, dst, values=vals, directed=directed)
+
+
+def _assert_layers_equal(got, want, *, check_arrays=True):
+    """Every query surface + (optionally) raw CSR equality."""
+    n = got.n_nodes
+    uu, vv = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    u = jnp.asarray(uu.ravel(), jnp.int32)
+    v = jnp.asarray(vv.ravel(), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(got.edge_value(u, v)), np.asarray(want.edge_value(u, v))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.check_edge(u, v)), np.asarray(want.check_edge(u, v))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.degrees()), np.asarray(want.degrees())
+    )
+    ids = jnp.arange(n, dtype=jnp.int32)
+    gv, gm = got.node_alters(ids, n)
+    wv, wm = want.node_alters(ids, n)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    key = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(
+        np.asarray(got.sample_neighbor(ids, key)),
+        np.asarray(want.sample_neighbor(ids, key)),
+    )
+    assert got.n_edges == want.n_edges
+    assert got.max_degree() == want.max_degree()
+    if check_arrays:
+        folded = compact_layer(got)
+        for side in ("out", "in_"):
+            a, b = getattr(folded, side), getattr(want, side)
+            if a is None or b is None:
+                assert a is None and b is None
+                continue
+            for name in ("indptr", "indices", "values"):
+                x, y = getattr(a, name), getattr(b, name)
+                if x is None or y is None:
+                    assert x is None and y is None
+                    continue
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"{side}.{name} mismatch",
+                )
+
+
+# ---------------------------------------------------------------------------
+# one-mode randomized schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("directed", [False, True])
+@pytest.mark.parametrize("valued", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_one_mode_overlay_matches_rebuild(directed, valued, seed):
+    rng = np.random.default_rng(seed)
+    m0 = 30
+    src = rng.integers(0, N, m0)
+    dst = rng.integers(0, N, m0)
+    vals = rng.uniform(0.5, 5.0, m0).astype(np.float32) if valued else None
+    # seed the model first and build the layer FROM it: a raw duplicate
+    # list can contain the same undirected edge in both orientations with
+    # different values, where the batch builder's winner is orientation-
+    # dependent — mutation batches canonicalize, the one-shot builder
+    # doesn't
+    model = {}
+    _model_add(model, src, dst, vals, directed=directed, valued=valued)
+    layer = _model_layer(model, n=N, directed=directed, valued=valued)
+
+    for step in range(12):
+        k = int(rng.integers(1, 8))
+        s = rng.integers(0, N, k)
+        d = rng.integers(0, N, k)
+        op = rng.integers(0, 3)
+        if op == 0 and valued:
+            w = rng.uniform(0.5, 5.0, k).astype(np.float32)
+            layer = add_edges(layer, s, d, values=w, compact_ratio=None)
+            _model_add(model, s, d, w, directed=directed, valued=valued)
+        elif op == 1:
+            layer = add_edges(layer, s, d, compact_ratio=None)
+            _model_add(model, s, d, None, directed=directed, valued=valued)
+        else:
+            # include out-of-range ids: deletes must silently ignore them
+            s = np.concatenate([s, [N + 3, -2]])
+            d = np.concatenate([d, [1, 1]])
+            layer = delete_edges(layer, s, d, compact_ratio=None)
+            _model_delete(model, s, d, directed=directed, n=N)
+        if step % 4 == 3 or step == 11:
+            want = _model_layer(
+                model, n=N, directed=directed, valued=valued
+            )
+            _assert_layers_equal(layer, want)
+    assert has_overlay(layer)
+
+
+def test_values_none_preserves_stored_value():
+    """Regression: upserting an existing valued edge with ``values=None``
+    must KEEP the stored value — it used to stamp the 1.0 default over
+    it on the rebuild path."""
+    layer = one_mode_from_edges(
+        8, [1, 2], [2, 3], values=[5.0, 6.0], directed=True
+    )
+    got = add_edges(layer, [1, 4], [2, 5], compact_ratio=None)
+    assert float(got.edge_value(jnp.array([1]), jnp.array([2]))[0]) == 5.0
+    assert float(got.edge_value(jnp.array([4]), jnp.array([5]))[0]) == 1.0
+    # same outcome through an immediate compaction
+    got2 = add_edges(layer, [1, 4], [2, 5], compact_ratio=0.0)
+    assert not has_overlay(got2)
+    assert float(got2.edge_value(jnp.array([1]), jnp.array([2]))[0]) == 5.0
+
+
+def test_upsert_over_tombstone():
+    layer = one_mode_from_edges(
+        8, [0, 1], [1, 2], values=[3.0, 4.0], directed=True
+    )
+    layer = delete_edges(layer, [0], [1], compact_ratio=None)
+    assert float(layer.edge_value(jnp.array([0]), jnp.array([1]))[0]) == 0.0
+    layer = add_edges(layer, [0], [1], values=[9.0], compact_ratio=None)
+    assert float(layer.edge_value(jnp.array([0]), jnp.array([1]))[0]) == 9.0
+    want = one_mode_from_edges(
+        8, [0, 1], [1, 2], values=[9.0, 4.0], directed=True
+    )
+    _assert_layers_equal(layer, want)
+
+
+def test_undirected_mirror_value_consistent():
+    """Upserting (v, u) on an undirected valued layer must give BOTH
+    stored orientations the new value."""
+    layer = one_mode_from_edges(
+        8, [0], [1], values=[2.0], directed=False
+    )
+    got = add_edges(layer, [1], [0], values=[7.0], compact_ratio=None)
+    assert float(got.edge_value(jnp.array([0]), jnp.array([1]))[0]) == 7.0
+    assert float(got.edge_value(jnp.array([1]), jnp.array([0]))[0]) == 7.0
+    # and deleting through the reversed orientation removes both
+    gone = delete_edges(got, [1], [0], compact_ratio=None)
+    assert not bool(gone.check_edge(jnp.array([0]), jnp.array([1]))[0])
+    assert not bool(gone.check_edge(jnp.array([1]), jnp.array([0]))[0])
+
+
+# ---------------------------------------------------------------------------
+# two-mode randomized schedules (incl. hyperedge growth)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_two_mode_overlay_matches_rebuild(seed):
+    rng = np.random.default_rng(seed)
+    h0 = 4
+    memberships = set(
+        (int(n), int(h))
+        for n, h in zip(rng.integers(0, N, 25), rng.integers(0, h0, 25))
+    )
+    nodes = np.array([p[0] for p in memberships], np.int64)
+    hes = np.array([p[1] for p in memberships], np.int64)
+    layer = two_mode_from_memberships(N, h0, nodes, hes)
+    n_hyper = h0
+
+    for step in range(10):
+        k = int(rng.integers(1, 6))
+        s = rng.integers(0, N, k)
+        if rng.integers(0, 2) == 0:
+            # growth: occasionally target a hyperedge id past the space
+            d = rng.integers(0, n_hyper + 2, k)
+            layer = add_edges(layer, s, d, compact_ratio=None)
+            for u, h in zip(s, d):
+                memberships.add((int(u), int(h)))
+                n_hyper = max(n_hyper, int(h) + 1)
+        else:
+            d = rng.integers(0, n_hyper + 1, k)  # may be out of range
+            layer = delete_edges(layer, s, d, compact_ratio=None)
+            for u, h in zip(s, d):
+                memberships.discard((int(u), int(h)))
+        assert layer.n_hyperedges == n_hyper
+        want = two_mode_from_memberships(
+            N, n_hyper,
+            np.array([p[0] for p in memberships], np.int64),
+            np.array([p[1] for p in memberships], np.int64),
+        )
+        uu, vv = np.meshgrid(np.arange(N), np.arange(N), indexing="ij")
+        u = jnp.asarray(uu.ravel(), jnp.int32)
+        v = jnp.asarray(vv.ravel(), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(layer.edge_value(u, v)),
+            np.asarray(want.edge_value(u, v)),
+        )
+        ids = jnp.arange(N, dtype=jnp.int32)
+        gv, gm = layer.node_alters(ids, N)
+        wv, wm = want.node_alters(ids, N)
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+        np.testing.assert_array_equal(
+            np.asarray(layer.degrees()), np.asarray(want.degrees())
+        )
+        np.testing.assert_array_equal(
+            np.asarray(layer.hyperedge_sizes()),
+            np.asarray(want.hyperedge_sizes()),
+        )
+        assert layer.max_memberships == want.max_memberships
+        assert layer.max_hyperedge_size == want.max_hyperedge_size
+    folded = compact_layer(layer)
+    want = two_mode_from_memberships(
+        N, n_hyper,
+        np.array([p[0] for p in memberships], np.int64),
+        np.array([p[1] for p in memberships], np.int64),
+    )
+    for csr_name in ("memb", "members"):
+        a, b = getattr(folded, csr_name), getattr(want, csr_name)
+        for name in ("indptr", "indices"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+                err_msg=f"{csr_name}.{name} mismatch",
+            )
+
+
+# ---------------------------------------------------------------------------
+# compaction policy
+# ---------------------------------------------------------------------------
+
+
+def test_compaction_policy_threshold():
+    layer = one_mode_from_edges(
+        N, np.arange(10), np.arange(1, 11), values=np.ones(10, np.float32),
+        directed=True,
+    )
+    # None: never compacts, ratio grows
+    ov = add_edges(layer, [0, 1, 2], [5, 6, 7], compact_ratio=None)
+    assert has_overlay(ov) and layer_overlay_ratio(ov) > 0
+    # 0: compacts immediately
+    assert not has_overlay(add_edges(layer, [0], [5], compact_ratio=0.0))
+    # generous threshold: small delta stays an overlay
+    small = add_edges(layer, [0], [5], compact_ratio=10.0)
+    assert has_overlay(small)
+    # threshold crossing folds back; the folded layer matches from-scratch
+    big = add_edges(
+        small, np.repeat(np.arange(8), 3), np.tile([9, 10, 11], 8),
+        compact_ratio=0.1,
+    )
+    assert not has_overlay(big)
+    assert DEFAULT_COMPACT_RATIO == 0.25
+
+
+def test_compacted_network_identity():
+    net = create_network(N)
+    layer = one_mode_from_edges(N, [0, 1], [1, 2], directed=False)
+    net = net.with_layer("a", layer)
+    assert net.compacted() is net  # no overlays -> same object
+    net2 = net.with_layer("a", add_edges(layer, [3], [4], compact_ratio=None))
+    folded = net2.compacted()
+    assert folded is not net2
+    assert not any(has_overlay(l) for l in folded.layers)
+
+
+# ---------------------------------------------------------------------------
+# network-level paths over overlay layers: dispatch, traversal, io
+# ---------------------------------------------------------------------------
+
+
+def _mutated_mixed_net(seed=5):
+    """Two layers (one per mode), both carrying live overlays."""
+    rng = np.random.default_rng(seed)
+    net = create_network(N)
+    om = one_mode_from_edges(
+        N, rng.integers(0, N, 30), rng.integers(0, N, 30),
+        values=rng.uniform(0.5, 5.0, 30).astype(np.float32), directed=False,
+    )
+    om = add_edges(
+        om, rng.integers(0, N, 6), rng.integers(0, N, 6),
+        values=rng.uniform(0.5, 5.0, 6).astype(np.float32),
+        compact_ratio=None,
+    )
+    om = delete_edges(
+        om, rng.integers(0, N, 4), rng.integers(0, N, 4), compact_ratio=None
+    )
+    tm = two_mode_from_memberships(
+        N, 4, rng.integers(0, N, 25), rng.integers(0, 4, 25)
+    )
+    tm = add_edges(
+        tm, rng.integers(0, N, 6), rng.integers(0, 6, 6), compact_ratio=None
+    )
+    tm = delete_edges(
+        tm, rng.integers(0, N, 3), rng.integers(0, 4, 3), compact_ratio=None
+    )
+    assert has_overlay(om) and has_overlay(tm)
+    return net.with_layer("one", om).with_layer("two", tm)
+
+
+def test_network_queries_match_compacted():
+    net = _mutated_mixed_net()
+    ref = net.compacted()
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.integers(0, N, 64), jnp.int32)
+    v = jnp.asarray(rng.integers(0, N, 64), jnp.int32)
+    for name in ("one", "two"):
+        np.testing.assert_array_equal(
+            np.asarray(net.edge_value(name, u, v)),
+            np.asarray(ref.edge_value(name, u, v)),
+        )
+    np.testing.assert_array_equal(
+        np.asarray(net.check_edge_any(u, v)),
+        np.asarray(ref.check_edge_any(u, v)),
+    )
+    gv, gm = net.node_alters(u, N)
+    wv, wm = ref.node_alters(u, N)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(
+        np.asarray(net.degree(u)), np.asarray(ref.degree(u))
+    )
+
+
+def test_traversal_matches_compacted():
+    from repro.core.traversal import components_batched
+
+    net = _mutated_mixed_net()
+    ref = net.compacted()
+    srcs = jnp.arange(0, N, 3, dtype=jnp.int32)
+    gn, gm, gh = net.khop(srcs, 2, max_frontier=N)
+    wn, wm, wh = ref.khop(srcs, 2, max_frontier=N)
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(wn))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(
+        np.asarray(components_batched(net)),
+        np.asarray(components_batched(ref)),
+    )
+
+
+def test_io_roundtrip_folds_overlay(tmp_path):
+    from repro.core.io import load_network, save_network
+
+    net = _mutated_mixed_net()
+    ref = net.compacted()
+    p = tmp_path / "net.npz"
+    save_network(net, p)
+    loaded = load_network(p)
+    for name in ("one", "two"):
+        got, want = loaded.layer(name), ref.layer(name)
+        assert not has_overlay(got)
+        pairs = (
+            (got.memb, want.memb) if hasattr(got, "memb")
+            else (got.out, want.out)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pairs[0].indices), np.asarray(pairs[1].indices)
+        )
+
+
+# ---------------------------------------------------------------------------
+# sharded views over overlay layers
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_queries_match_unsharded_with_overlay():
+    from repro.core.sharded import shard_network
+
+    net = _mutated_mixed_net()
+    snet = shard_network(net, 3, devices=())
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.integers(0, N, 48), jnp.int32)
+    v = jnp.asarray(rng.integers(0, N, 48), jnp.int32)
+    for name in ("one", "two"):
+        np.testing.assert_array_equal(
+            np.asarray(snet.edge_value(name, u, v)),
+            np.asarray(net.edge_value(name, u, v)),
+        )
+    gv, gm = snet.node_alters(u, N)
+    wv, wm = net.node_alters(u, N)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(
+        np.asarray(snet.degree(u)), np.asarray(net.degree(u))
+    )
+    gn, gm2, _ = snet.khop(u[:8], 2, max_frontier=N)
+    wn, wm2, _ = net.khop(u[:8], 2, max_frontier=N)
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(wn))
+    np.testing.assert_array_equal(np.asarray(gm2), np.asarray(wm2))
+    from repro.core.traversal import components_batched
+
+    np.testing.assert_array_equal(
+        np.asarray(snet.components()), np.asarray(components_batched(net))
+    )
+
+
+def test_reshard_deltas_overlay_only_mutation():
+    from repro.core.sharded import reshard_deltas, shard_network
+
+    rng = np.random.default_rng(2)
+    net = create_network(N).with_layer(
+        "a",
+        one_mode_from_edges(
+            N, rng.integers(0, N, 30), rng.integers(0, N, 30), directed=True,
+        ),
+    )
+    snet = shard_network(net, 3, devices=())
+    # overlay-only mutation: bases stay object-identical -> cheap reshard
+    layer2 = add_edges(net.layer("a"), [0, 7], [5, 2], compact_ratio=None)
+    net2 = net.with_layer("a", layer2)
+    re = reshard_deltas(snet, net2)
+    assert re is not None
+    assert re.shards[0].layer("a").out is snet.shards[0].layer("a").out
+    u = jnp.asarray(rng.integers(0, N, 32), jnp.int32)
+    v = jnp.asarray(rng.integers(0, N, 32), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(re.edge_value("a", u, v)),
+        np.asarray(net2.edge_value("a", u, v)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(re.degree(u)), np.asarray(net2.degree(u))
+    )
+    # compaction rebuilds the base -> reshard_deltas must decline
+    net3 = net2.compacted()
+    assert reshard_deltas(snet, net3) is None
+    # unchanged network -> same view object
+    assert reshard_deltas(snet, net) is snet
+
+
+# ---------------------------------------------------------------------------
+# serve engine: overlay mutations keep scoped invalidation + shard reuse
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_overlay_mutation_scoped_and_sharded():
+    # big enough that a 2-edge batch stays under DEFAULT_COMPACT_RATIO
+    rng = np.random.default_rng(9)
+    n = 60
+    net = create_network(n).with_layer(
+        "one",
+        one_mode_from_edges(
+            n, rng.integers(0, n, 300), rng.integers(0, n, 300),
+            values=rng.uniform(0.5, 5.0, 300).astype(np.float32),
+            directed=False,
+        ),
+    ).with_layer(
+        "two",
+        two_mode_from_memberships(
+            n, 6, rng.integers(0, n, 80), rng.integers(0, 6, 80)
+        ),
+    )
+    eng = net.serve_session(shards=2)
+    try:
+        base_out = eng.net.layer("one").out
+        r1 = eng.submit({"kind": "getedge", "layer": "two", "u": 1, "v": 2})
+        eng.pump()
+        before = eng.result(r1)
+        # mutate layer "one" only: scoped invalidation keeps layer-"two"
+        # entries, and the sharded view reuses the sliced bases
+        eng.add_edges("one", [0, 1], [4, 5])
+        assert eng.net.layer("one").out is base_out  # overlay, not rebuild
+        assert has_overlay(eng.net.layer("one"))
+        stats0 = eng.stats["cache"]
+        r2 = eng.submit({"kind": "getedge", "layer": "two", "u": 1, "v": 2})
+        eng.pump()
+        after = eng.result(r2)
+        assert eng.stats["cache"]["hits"] == stats0["hits"] + 1
+        assert np.asarray(after.value) == np.asarray(before.value)
+        # mutated layer answers through the overlay, matching unsharded
+        r3 = eng.submit({"kind": "getedge", "layer": "one", "u": 0, "v": 4})
+        eng.pump()
+        got = eng.result(r3)
+        assert float(np.asarray(got.value)) == float(
+            np.asarray(eng.net.edge_value("one", 0, 4))[0]
+        )
+    finally:
+        eng.close()
